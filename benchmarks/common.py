@@ -1,0 +1,43 @@
+"""Shared helpers for the paper-figure benchmarks."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.core import (
+    DatabaseEvaluator,
+    Trace,
+    database_generation_cost,
+    paper_platform,
+    weights,
+)
+from repro.models.cnn import network_layers
+
+OUT = Path(__file__).resolve().parent.parent / "experiments" / "benchmarks"
+
+
+def setup(net: str, n_eps: int = 8):
+    layers = network_layers(net)
+    plat = paper_platform(n_eps)
+    return layers, weights(layers), plat
+
+
+def fresh_trace(plat, layers, setup_cost: float = 0.0) -> Trace:
+    return Trace(DatabaseEvaluator(plat, layers), setup_cost=setup_cost)
+
+
+def db_cost(n_layers: int, n_eps: int, max_depth=None) -> float:
+    return database_generation_cost(n_layers, n_eps, max_depth)
+
+
+def save(name: str, payload: dict) -> Path:
+    OUT.mkdir(parents=True, exist_ok=True)
+    p = OUT / f"{name}.json"
+    p.write_text(json.dumps(payload, indent=2))
+    return p
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

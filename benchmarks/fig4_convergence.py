@@ -1,0 +1,109 @@
+"""Fig. 4 — convergence race: Shisha vs SA / HC / RW / ES / Pipe-Search.
+
+SynthNet on 8 EPs, identical simulated cost accounting for every explorer.
+SA_s / HC_s start from the Shisha seed (the paper's fairness variant);
+ES / PS pay the up-front configuration-database generation cost.
+
+Reported: convergence curves, time-to-converge, and the speedup of Shisha
+over each baseline (paper claims ~35× on average).
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core import (
+    exhaustive_search,
+    generate_seed,
+    hill_climbing,
+    pipe_search,
+    random_walk,
+    run_shisha,
+    simulated_annealing,
+)
+
+from .common import db_cost, fresh_trace, save, setup
+
+BUDGET_S = 3000.0
+MAX_DEPTH = 4  # ES/PS database is generated up to this depth (paper's limit)
+
+
+def time_to_converge(trace, final_frac: float = 0.99) -> float:
+    """Simulated wall time when best-so-far first reaches 99% of its final."""
+    curve = trace.convergence_curve()
+    if not curve:
+        return float("inf")
+    final = curve[-1][1]
+    for t, tp in curve:
+        if tp >= final_frac * final:
+            return t
+    return curve[-1][0]
+
+
+def run(verbose: bool = True) -> dict:
+    layers, ws, plat = setup("synthnet", 8)
+    n = len(ws)
+    results = {}
+
+    t0 = time.perf_counter()
+    sh = run_shisha(ws, fresh_trace(plat, layers), "H3")
+    wall_real = time.perf_counter() - t0
+    results["Shisha"] = {
+        "trace": sh.trace,
+        "best": sh.result.best_throughput,
+        "real_s": wall_real,
+    }
+
+    seed_conf = generate_seed(ws, plat, choice="rank_w").conf
+    setup_db = db_cost(n, 8, MAX_DEPTH)
+
+    runs = {
+        "HC": lambda tr: hill_climbing(tr, n, BUDGET_S, seed=0),
+        "HC_s": lambda tr: hill_climbing(tr, n, BUDGET_S, start=seed_conf, seed=0),
+        "SA": lambda tr: simulated_annealing(tr, n, BUDGET_S, seed=0),
+        "SA_s": lambda tr: simulated_annealing(tr, n, BUDGET_S, start=seed_conf, seed=0),
+        "RW": lambda tr: random_walk(tr, n, BUDGET_S, seed=0),
+    }
+    for name, fn in runs.items():
+        tr = fresh_trace(plat, layers)
+        t0 = time.perf_counter()
+        res = fn(tr)
+        results[name] = {"trace": tr, "best": res.best_throughput, "real_s": time.perf_counter() - t0}
+
+    tr = fresh_trace(plat, layers, setup_cost=setup_db)
+    res = exhaustive_search(tr, n, budget_s=setup_db + BUDGET_S, max_depth=3)
+    results["ES"] = {"trace": tr, "best": res.best_throughput, "real_s": 0.0}
+
+    tr = fresh_trace(plat, layers, setup_cost=setup_db)
+    res = pipe_search(tr, ws, budget_s=setup_db + BUDGET_S, max_depth=MAX_DEPTH)
+    results["PS"] = {"trace": tr, "best": res.best_throughput, "real_s": 0.0}
+
+    sh_t = time_to_converge(results["Shisha"]["trace"])
+    payload = {"net": "synthnet", "n_eps": 8, "algorithms": {}}
+    speedups = []
+    for name, r in results.items():
+        tc = time_to_converge(r["trace"])
+        sp = tc / sh_t if name != "Shisha" else 1.0
+        if name != "Shisha":
+            speedups.append(sp)
+        payload["algorithms"][name] = {
+            "best_throughput": r["best"],
+            "n_trials": r["trace"].n_trials,
+            "time_to_converge_s": tc,
+            "speedup_of_shisha": sp,
+            "curve": r["trace"].convergence_curve()[:200],
+        }
+        if verbose:
+            print(
+                f"  fig4 {name:7s} best={r['best']:.4f} trials={r['trace'].n_trials:6d} "
+                f"t_conv={tc:10.2f}s shisha_speedup={sp:8.1f}x"
+            )
+    payload["mean_speedup"] = sum(speedups) / len(speedups)
+    if verbose:
+        print(f"  fig4 mean convergence speedup of Shisha: {payload['mean_speedup']:.1f}x (paper: ~35x)")
+    save("fig4_convergence", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

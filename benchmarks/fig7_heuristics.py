@@ -1,0 +1,63 @@
+"""Fig. 7/8 — heuristic sweep H1..H6 across EP configurations C1..C5.
+
+Fig. 7: solution throughput per (heuristic, platform), normalized to the
+best heuristic on that platform.  Fig. 8: convergence time of H1 vs H3
+(paper: H1/H3 win ~80% of cases; H3 converges faster in ~90%).
+"""
+
+from __future__ import annotations
+
+from repro.core import HEURISTICS, run_shisha, table3_platform
+
+from .common import fresh_trace, save
+from repro.models.cnn import network_layers
+from repro.core import weights, DatabaseEvaluator, Trace
+
+
+def run(verbose: bool = True, nets=("resnet50", "yolov3")) -> dict:
+    payload = {}
+    h1h3_faster = 0
+    h1h3_total = 0
+    best_is_h1_or_h3 = 0
+    cases = 0
+    for net in nets:
+        layers = network_layers(net)
+        ws = weights(layers)
+        payload[net] = {}
+        for conf_name in ("C1", "C2", "C3", "C4", "C5"):
+            plat = table3_platform(conf_name)
+            row = {}
+            for h in HEURISTICS:
+                tr = Trace(DatabaseEvaluator(plat, layers))
+                res = run_shisha(ws, tr, h)
+                row[h] = {"tp": res.result.best_throughput, "wall": tr.wall, "trials": tr.n_trials}
+            best = max(row.values(), key=lambda r: r["tp"])["tp"]
+            for h in row:
+                row[h]["norm"] = row[h]["tp"] / best
+            payload[net][conf_name] = row
+            cases += 1
+            winner = max(row, key=lambda h: row[h]["tp"])
+            if winner in ("H1", "H3"):
+                best_is_h1_or_h3 += 1
+            h1h3_total += 1
+            if row["H3"]["wall"] <= row["H1"]["wall"]:
+                h1h3_faster += 1
+            if verbose:
+                cells = " ".join(f"{h}={row[h]['norm']:.3f}" for h in HEURISTICS)
+                print(f"  fig7 {net:9s} {conf_name} {cells}  winner={winner}")
+    payload["summary"] = {
+        "h1_or_h3_wins_frac": best_is_h1_or_h3 / cases,
+        "h3_faster_than_h1_frac": h1h3_faster / h1h3_total,
+    }
+    if verbose:
+        s = payload["summary"]
+        print(
+            f"  fig7/8 H1-or-H3 wins {s['h1_or_h3_wins_frac']*100:.0f}% of cases (paper ~80%); "
+            f"H3 faster than H1 in {s['h3_faster_than_h1_frac']*100:.0f}% (paper ~90%)"
+        )
+    save("fig7_heuristics", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

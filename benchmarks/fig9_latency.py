@@ -1,0 +1,41 @@
+"""Fig. 9 — impact of inter-chiplet latency on pipeline throughput.
+
+Latency sweep 1 ns .. 1 s injected into every chip-to-chip transfer of the
+best SynthNet schedule (paper: throughput flat until ~1 ms, Shisha still
+finds near-optimal schedules beyond)."""
+
+from __future__ import annotations
+
+from repro.core import AnalyticEvaluator, DatabaseEvaluator, Trace, run_shisha, weights
+
+from .common import save, setup
+
+LATENCIES = [1e-9, 1e-7, 1e-5, 1e-4, 1e-3, 1e-2, 1e-1, 1.0]
+
+
+def run(verbose: bool = True) -> dict:
+    layers, ws, plat = setup("synthnet", 8)
+    base = run_shisha(ws, Trace(DatabaseEvaluator(plat, layers)), "H3")
+    conf = base.result.best_conf
+    base_tp = base.result.best_throughput
+
+    payload = {"latencies": [], "fixed_conf_tp": [], "retuned_tp": []}
+    for lat in LATENCIES:
+        plat_l = plat.with_latency(lat)
+        ev = DatabaseEvaluator(plat_l, layers)
+        tp_fixed = ev.throughput(conf)
+        retuned = run_shisha(ws, Trace(DatabaseEvaluator(plat_l, layers)), "H3")
+        payload["latencies"].append(lat)
+        payload["fixed_conf_tp"].append(tp_fixed / base_tp)
+        payload["retuned_tp"].append(retuned.result.best_throughput / base_tp)
+        if verbose:
+            print(
+                f"  fig9 latency={lat:8.0e}s fixed={tp_fixed / base_tp:6.3f} "
+                f"retuned={retuned.result.best_throughput / base_tp:.3f}"
+            )
+    save("fig9_latency", payload)
+    return payload
+
+
+if __name__ == "__main__":
+    run()

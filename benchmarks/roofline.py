@@ -1,0 +1,92 @@
+"""Roofline table: aggregate experiments/dryrun/*.json into EXPERIMENTS-ready
+markdown + a machine-readable summary.
+
+Terms (per device, per step; TPU v5e constants):
+    compute    = HLO_FLOPs / 197e12
+    memory     = HLO_bytes / 819e9
+    collective = wire_bytes / 50e9
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DRYRUN = Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load(mesh: str = "single") -> list[dict]:
+    recs = []
+    for p in sorted(DRYRUN.glob(f"*__{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def table(mesh: str = "single") -> str:
+    rows = [
+        "| arch | shape | phase | compute s | memory s | collective s | dominant | mem GiB/dev | useful-FLOPs ratio |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in load(mesh):
+        if not r.get("runs"):
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | SKIP | — | — | — | — | — | {r['reason'][:60]} |"
+            )
+            continue
+        if "roofline" not in r:
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | {r['phase']} | compiled | | | | "
+                f"{r['memory']['peak_estimate_gib']} | |"
+            )
+            continue
+        ro = r["roofline"]
+        ufr = ro.get("useful_flops_ratio")
+        rows.append(
+            "| {arch} | {shape} | {phase} | {c} | {m} | {k} | **{dom}** | {gib} | {ufr} |".format(
+                arch=r["arch"],
+                shape=r["shape"],
+                phase=r["phase"],
+                c=_fmt(ro["compute_s"]),
+                m=_fmt(ro["memory_s"]),
+                k=_fmt(ro["collective_s"]),
+                dom=ro["dominant"],
+                gib=r["memory"]["peak_estimate_gib"],
+                ufr=f"{ufr:.2f}" if ufr else "—",
+            )
+        )
+    return "\n".join(rows)
+
+
+def summary(mesh: str = "single") -> dict:
+    recs = [r for r in load(mesh) if r.get("runs") and "roofline" in r]
+    doms = {}
+    for r in recs:
+        doms.setdefault(r["roofline"]["dominant"], []).append(f"{r['arch']}/{r['shape']}")
+    return {
+        "n_cells": len(recs),
+        "dominant_counts": {k: len(v) for k, v in doms.items()},
+        "dominant_cells": doms,
+    }
+
+
+def run(verbose: bool = True):
+    for mesh in ("single", "multi"):
+        recs = load(mesh)
+        if not recs:
+            continue
+        ok = [r for r in recs if r.get("runs")]
+        if verbose:
+            print(f"  roofline[{mesh}]: {len(ok)} compiled cells, {len(recs) - len(ok)} skipped")
+        if mesh == "single" and verbose:
+            s = summary(mesh)
+            print(f"  roofline dominant terms: {s['dominant_counts']}")
+    return summary("single")
+
+
+if __name__ == "__main__":
+    print(table("single"))
+    print(json.dumps(summary("single"), indent=2))

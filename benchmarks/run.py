@@ -1,0 +1,62 @@
+"""Benchmark orchestrator — one harness per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+Prints ``name,us_per_call,derived`` CSV rows per harness plus per-figure
+summaries; raw payloads land in experiments/benchmarks/*.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="skip the slowest figures")
+    ap.add_argument("--only", default=None, help="comma-separated figure list")
+    args = ap.parse_args()
+
+    from . import fig4_convergence, fig5_quality, fig6_seed, fig7_heuristics, fig9_latency
+    from . import kernels_bench, roofline
+
+    figures = {
+        "fig4": fig4_convergence.run,
+        "fig5": fig5_quality.run,
+        "fig6": fig6_seed.run,
+        "fig7": fig7_heuristics.run,
+        "fig9": fig9_latency.run,
+        "kernels": kernels_bench.run,
+        "roofline": roofline.run,
+    }
+    if args.only:
+        keep = set(args.only.split(","))
+        figures = {k: v for k, v in figures.items() if k in keep}
+    if args.quick:
+        figures.pop("fig6", None)
+
+    rows = []
+    for name, fn in figures.items():
+        t0 = time.perf_counter()
+        print(f"[bench] {name} ...", flush=True)
+        try:
+            fn()
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append(f"{name},{dt:.0f},ok")
+        except Exception as e:  # keep the harness going; report at the end
+            dt = (time.perf_counter() - t0) * 1e6
+            rows.append(f"{name},{dt:.0f},FAILED:{type(e).__name__}:{e}")
+            import traceback
+
+            traceback.print_exc()
+    print("\nname,us_per_call,derived")
+    for r in rows:
+        print(r)
+    if any("FAILED" in r for r in rows):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

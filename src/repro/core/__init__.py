@@ -1,0 +1,85 @@
+"""Shisha core: the paper's contribution (seed generation + online tuning)."""
+
+from .baselines import (
+    SearchResult,
+    database_generation_cost,
+    exhaustive_search,
+    hill_climbing,
+    pipe_search,
+    random_config,
+    random_walk,
+    simulated_annealing,
+)
+from .config import PipelineConfig
+from .cost_model import (
+    Layer,
+    attention_layer,
+    conv_layer,
+    ffn_layer,
+    fuse,
+    ssd_layer,
+    total_flops,
+    weights,
+)
+from .evaluator import AnalyticEvaluator, DatabaseEvaluator, Trace, Trial
+from .heuristics import HEURISTICS, ShishaResult, run_shisha
+from .platform import (
+    EP,
+    Platform,
+    paper_platform,
+    table3_platform,
+    tpu_platform,
+    tpu_slice_ep,
+    TPU_PEAK_FLOPS,
+    TPU_HBM_BW,
+    TPU_ICI_BW,
+)
+from .seed import Seed, assign_eps, generate_seed, merge_layers
+from .space import compositions, enumerate_configs, space_size
+from .tuner import TuneResult, pick_target, tune
+
+__all__ = [
+    "AnalyticEvaluator",
+    "DatabaseEvaluator",
+    "EP",
+    "HEURISTICS",
+    "Layer",
+    "PipelineConfig",
+    "Platform",
+    "SearchResult",
+    "Seed",
+    "ShishaResult",
+    "Trace",
+    "Trial",
+    "TuneResult",
+    "attention_layer",
+    "assign_eps",
+    "compositions",
+    "conv_layer",
+    "database_generation_cost",
+    "enumerate_configs",
+    "exhaustive_search",
+    "ffn_layer",
+    "fuse",
+    "generate_seed",
+    "hill_climbing",
+    "merge_layers",
+    "paper_platform",
+    "pick_target",
+    "pipe_search",
+    "random_config",
+    "random_walk",
+    "run_shisha",
+    "simulated_annealing",
+    "space_size",
+    "ssd_layer",
+    "table3_platform",
+    "total_flops",
+    "tpu_platform",
+    "tpu_slice_ep",
+    "tune",
+    "weights",
+    "TPU_PEAK_FLOPS",
+    "TPU_HBM_BW",
+    "TPU_ICI_BW",
+]

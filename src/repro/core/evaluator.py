@@ -1,0 +1,198 @@
+"""The ``execute(conf)`` oracle of Algorithm 2.
+
+The paper measures throughput of a candidate pipeline by actually running it
+(in their setup: querying a gem5-derived database of per-layer times).  The
+oracle is therefore pluggable here:
+
+  * :class:`AnalyticEvaluator` — roofline model per (layer, EP):
+        t_layer = max(flops / EP.flops, bytes / EP.mem_bw)
+    plus inter-stage transfer time over the EP link (bandwidth + latency,
+    the Fig. 9 knob).  Throughput = 1 / max_stage_time (steady-state
+    pipeline, one inference unit per beat).
+
+  * :class:`DatabaseEvaluator` — mimics the paper's gem5 database: per
+    (layer, EP-type) times are precomputed once with deterministic
+    measurement noise, then only *queried* during exploration.  This is the
+    faithful-reproduction oracle used by benchmarks/fig*.py.
+
+  * :class:`MeasuringEvaluator` (in ``pipeline/runtime.py``) — times the
+    real JAX pipeline; the true "online" mode.
+
+Every evaluator is wrapped in :class:`Trace` by the exploration drivers to
+account configurations tried and *simulated wall-clock cost* of trying them
+(a trial costs ``measure_batches`` pipeline beats plus a reconfiguration
+penalty — this is what makes "trying bad configurations" expensive, the
+effect Shisha exploits).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Protocol, Sequence
+
+from .config import PipelineConfig
+from .cost_model import Layer
+from .platform import Platform
+
+
+class Evaluator(Protocol):
+    platform: Platform
+    layers: Sequence[Layer]
+
+    def stage_times(self, conf: PipelineConfig) -> list[float]: ...
+
+    def throughput(self, conf: PipelineConfig) -> float: ...
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AnalyticEvaluator:
+    """Roofline-model oracle (layer time = max(compute, memory) + link)."""
+
+    platform: Platform
+    layers: Sequence[Layer]
+    #: per-layer fixed overhead on the EP (kernel-launch / queue pop), s
+    layer_overhead: float = 2e-6
+
+    def layer_time(self, layer: Layer, ep_idx: int) -> float:
+        ep = self.platform.eps[ep_idx]
+        return max(layer.flops / ep.flops, layer.bytes_mem / ep.mem_bw) + self.layer_overhead
+
+    def stage_times(self, conf: PipelineConfig) -> list[float]:
+        times = []
+        bounds = conf.boundaries()
+        for s, (a, b) in enumerate(bounds):
+            ep_idx = conf.eps[s]
+            t = sum(self.layer_time(self.layers[i], ep_idx) for i in range(a, b))
+            # inter-stage transfer: output activations of the stage's last
+            # layer cross the link to the next stage's EP.
+            if s < conf.depth - 1:
+                ep = self.platform.eps[ep_idx]
+                nxt = self.platform.eps[conf.eps[s + 1]]
+                bw = min(ep.link_bw, nxt.link_bw)
+                lat = max(ep.link_latency, nxt.link_latency)
+                t += self.layers[b - 1].act_bytes / bw + lat
+            times.append(t)
+        return times
+
+    def throughput(self, conf: PipelineConfig) -> float:
+        """Steady-state inferences/second = 1 / slowest stage beat."""
+        return 1.0 / max(self.stage_times(conf))
+
+    def pipeline_latency(self, conf: PipelineConfig) -> float:
+        return sum(self.stage_times(conf))
+
+
+# ---------------------------------------------------------------------------
+
+
+def _noise(key: str, sigma: float) -> float:
+    """Deterministic pseudo-measurement noise in [1-sigma, 1+sigma]."""
+    h = int.from_bytes(hashlib.sha256(key.encode()).digest()[:8], "big")
+    u = h / float(1 << 64)  # [0,1)
+    return 1.0 + sigma * (2.0 * u - 1.0)
+
+
+@dataclasses.dataclass
+class DatabaseEvaluator(AnalyticEvaluator):
+    """gem5-style database: times precomputed once, then only queried.
+
+    Deterministic multiplicative noise models gem5-vs-model discrepancy; it
+    is keyed on (layer, EP) so repeated queries return identical values, as
+    a database would.
+    """
+
+    noise_sigma: float = 0.08
+
+    def __post_init__(self):
+        self._db: dict[tuple[int, int], float] = {}
+        for li, layer in enumerate(self.layers):
+            for ei in range(self.platform.n_eps):
+                base = AnalyticEvaluator.layer_time(self, layer, ei)
+                self._db[(li, ei)] = base * _noise(f"{layer.name}|{self.platform.eps[ei].name}", self.noise_sigma)
+
+    def layer_time_by_index(self, layer_idx: int, ep_idx: int) -> float:
+        return self._db[(layer_idx, ep_idx)]
+
+    def stage_times(self, conf: PipelineConfig) -> list[float]:
+        times = []
+        for s, (a, b) in enumerate(conf.boundaries()):
+            ep_idx = conf.eps[s]
+            t = sum(self._db[(i, ep_idx)] for i in range(a, b))
+            if s < conf.depth - 1:
+                ep = self.platform.eps[ep_idx]
+                nxt = self.platform.eps[conf.eps[s + 1]]
+                bw = min(ep.link_bw, nxt.link_bw)
+                lat = max(ep.link_latency, nxt.link_latency)
+                t += self.layers[b - 1].act_bytes / bw + lat
+            times.append(t)
+        return times
+
+
+# ---------------------------------------------------------------------------
+# Exploration accounting
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Trial:
+    conf: PipelineConfig
+    throughput: float
+    #: cumulative simulated wall-clock when this trial finished, seconds
+    t_wall: float
+
+
+@dataclasses.dataclass
+class Trace:
+    """Wraps an evaluator; accounts every execute() like the real runtime.
+
+    Trying a configuration online costs real time: the pipeline must be
+    reconfigured (weights shipped to the new EPs) and run for a few batches
+    to measure steady-state throughput.  All exploration algorithms pay this
+    identically, so convergence-time comparisons (Fig. 4) are fair.
+    """
+
+    evaluator: AnalyticEvaluator
+    measure_batches: int = 8
+    reconfig_overhead: float = 0.05  # seconds per reconfiguration
+    #: one-off setup cost (e.g. Pipe-Search / ES database generation)
+    setup_cost: float = 0.0
+
+    def __post_init__(self):
+        self.trials: list[Trial] = []
+        self._wall = float(self.setup_cost)
+        self._cache: dict[PipelineConfig, float] = {}
+
+    @property
+    def wall(self) -> float:
+        return self._wall
+
+    @property
+    def n_trials(self) -> int:
+        return len(self.trials)
+
+    def execute(self, conf: PipelineConfig) -> float:
+        """Measure throughput of ``conf``, paying the simulated cost."""
+        beat = max(self.evaluator.stage_times(conf))
+        fill = self.evaluator.pipeline_latency(conf)
+        self._wall += self.reconfig_overhead + fill + self.measure_batches * beat
+        tp = self.evaluator.throughput(conf)
+        self._cache[conf] = tp
+        self.trials.append(Trial(conf, tp, self._wall))
+        return tp
+
+    def best(self) -> Trial:
+        if not self.trials:
+            raise RuntimeError("no trials executed")
+        return max(self.trials, key=lambda t: t.throughput)
+
+    def convergence_curve(self) -> list[tuple[float, float]]:
+        """(wall time, best-so-far throughput) staircase, for Fig. 4."""
+        out, best = [], 0.0
+        for t in self.trials:
+            best = max(best, t.throughput)
+            out.append((t.t_wall, best))
+        return out

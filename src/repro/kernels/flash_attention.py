@@ -1,0 +1,113 @@
+"""Flash attention Pallas kernel (online-softmax, causal, GQA-aware wrapper).
+
+Grid (batch·kv_heads·group, q_blocks, kv_blocks) with the KV sweep as the
+innermost sequential dimension; running max / normalizer / fp32 accumulator
+live in VMEM scratch across KV iterations and the output tile is emitted on
+the last KV block.  Causal blocks strictly above the diagonal are skipped
+with ``pl.when`` (no MXU work issued).
+
+Block shapes default to (128, 128): q tile BQ×D and kv tile BK×D are
+MXU-aligned panels; per-step VMEM ≈ (BQ + 2·BK)·D + BQ·BK + BQ·D fp32.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale, causal, bq, bk, n_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = (not causal) or (ki * bk <= qi * bq + bq - 1)
+
+    @pl.when(run)
+    def _step():
+        q = q_ref[0]  # [BQ, D]
+        k = k_ref[0]  # [BK, D]
+        v = v_ref[0]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+        if causal:
+            qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(qpos >= kpos, s, _NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """q: [B, H, S, D]; k, v: [B, KVH, S, D] with H % KVH == 0 -> [B, H, S, D]."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    bq = min(bq, s)
+    bk = min(bk, s)
+    assert s % bq == 0 and s % bk == 0, "seq must divide block size"
+    scale = 1.0 / math.sqrt(d)
+    # fold batch and heads; map q-head -> kv-head by integer division
+    qf = q.reshape(b * h, s, d)
+    n_kv = s // bk
+
+    kf = k.reshape(b * kvh, s, d)
+    vf = v.reshape(b * kvh, s, d)
+    # q index i runs over b*h: batch = i // h, qhead = i % h, kvhead = qhead // group
+    def kv_map(i, qi, ki):
+        batch = i // h
+        kvhead = (i % h) // group
+        return (batch * kvh + kvhead, ki, 0)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_kernel, scale=scale, causal=causal, bq=bq, bk=bk, n_kv=n_kv
+        ),
+        grid=(b * h, s // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda i, qi, ki: (i, qi, 0)),
+            pl.BlockSpec((1, bk, d), kv_map),
+            pl.BlockSpec((1, bk, d), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda i, qi, ki: (i, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, s, d)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def gemm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    return jnp.dot(a, b, preferred_element_type=jnp.float32).astype(a.dtype)
+
+
+def conv2d_ref(x: jax.Array, w: jax.Array, *, stride: int = 1) -> jax.Array:
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool = True) -> jax.Array:
+    """q: [B, H, S, D]; k/v: [B, KVH, S, D] (GQA)."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, s, d)
+    scores = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32) / math.sqrt(d)
+    if causal:
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", p, v)
+    return out.reshape(b, h, s, d)
+
+
+def ssd_ref(x, dt, A, B, C):
+    """Naive sequential SSD recurrence in fp64-ish fp32 (oracle)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, Bt, Ct = inp  # [b,h,p], [b,h], [b,n], [b,n]
+        dA = jnp.exp(dtt * A[None, :])  # [b,h]
+        state = state * dA[..., None, None] + jnp.einsum("bh,bn,bhp->bhpn", dtt, Bt, xt)
+        y = jnp.einsum("bhpn,bn->bhp", state, Ct)
+        return state, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B.transpose(1, 0, 2).astype(jnp.float32),
+        C.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    _, ys = jax.lax.scan(step, jnp.zeros((b, h, p, n), jnp.float32), xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype)

@@ -1,0 +1,95 @@
+"""Mamba2 SSD chunk-scan Pallas kernel.
+
+The SSD recurrence is re-blocked for the MXU exactly as in the chunked
+formulation (blocks.py): within a chunk the output is a masked-decay
+attention-like product (three small matmuls), across chunks a [P, N] state
+is carried.  The carry lives in VMEM scratch across the *sequential* chunk
+grid dimension — the TPU grid is the scan loop, so the state never round-
+trips to HBM.
+
+Grid: (batch·heads, n_chunks).  Per-step VMEM: chunk panels x [CL, P],
+B/C [CL, N], decay matrices [CL, CL], state [P, N] fp32 — with CL=64,
+P=64, N=128: ≈ 120 KB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, cl: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)  # [CL, P]
+    dt = dt_ref[0].astype(jnp.float32)  # [CL]
+    a_h = a_ref[0].astype(jnp.float32)  # scalar A for this head
+    bmat = b_ref[0].astype(jnp.float32)  # [CL, N]
+    cmat = c_ref[0].astype(jnp.float32)  # [CL, N]
+
+    la = dt * a_h  # [CL] log-decay per step
+    cum = jnp.cumsum(la)  # [CL]
+    xdt = x * dt[:, None]
+
+    # intra-chunk: masked decay kernel L[l, s] = exp(cum_l - cum_s) for l >= s
+    li = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (cl, cl), 1)
+    ldec = jnp.where(li >= si, jnp.exp(cum[:, None] - cum[None, :]), 0.0)
+    g = jnp.dot(cmat, bmat.T, preferred_element_type=jnp.float32)  # [CL, CL]
+    y = jnp.dot(g * ldec, xdt, preferred_element_type=jnp.float32)  # [CL, P]
+
+    # inter-chunk: contribution of the carried state, then state update
+    state = state_ref[...]  # [P, N]
+    y += jnp.exp(cum)[:, None] * jnp.dot(cmat, state.T, preferred_element_type=jnp.float32)
+    decay_to_end = jnp.exp(cum[-1] - cum)  # [CL]
+    new_contrib = jnp.dot((decay_to_end[:, None] * xdt).T, bmat, preferred_element_type=jnp.float32)
+    state_ref[...] = state * jnp.exp(cum[-1]) + new_contrib
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    A: jax.Array,
+    B: jax.Array,
+    C: jax.Array,
+    *,
+    chunk: int = 64,
+    interpret: bool = False,
+) -> jax.Array:
+    """SSD: x [b, l, h, p]; dt [b, l, h]; A [h]; B, C [b, l, n] -> y like x."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, (l, chunk)
+    nc = l // chunk
+    # layout: fold (b, h), chunk-major sequences
+    xf = x.transpose(0, 2, 1, 3).reshape(b * h, l, p)
+    dtf = dt.transpose(0, 2, 1).reshape(b * h, l)
+    af = jnp.broadcast_to(A[None, :], (b, h)).reshape(b * h)
+    bf = jnp.broadcast_to(B[:, None], (b, h, l, n)).reshape(b * h, l, n)
+    cf = jnp.broadcast_to(C[:, None], (b, h, l, n)).reshape(b * h, l, n)
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, cl=chunk),
+        grid=(b * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk), lambda i, c: (i, c)),
+            pl.BlockSpec((1,), lambda i, c: (i,)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, p), lambda i, c: (i, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, l, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(xf, dtf, af, bf, cf)
+    return y.reshape(b, h, l, p).transpose(0, 2, 1, 3)

@@ -1,0 +1,1 @@
+"""Launchers: production meshes, dry-run driver, training / serving CLIs."""

@@ -1,0 +1,491 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver.
+
+For every (architecture × input-shape) cell, build the production mesh,
+jit the real step function (train / prefill / decode) with explicit
+in/out shardings, ``.lower().compile()`` it against ShapeDtypeStructs
+(no allocation), and record:
+
+  * memory_analysis()      — per-device argument/output/temp bytes,
+  * cost_analysis()        — per-device HLO FLOPs and bytes accessed,
+  * the collective schedule parsed out of the partitioned HLO
+    (op kind, dtype, per-device bytes, group size, wire-byte estimate).
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json; the
+roofline table (benchmarks/roofline.py) and EXPERIMENTS.md are generated
+from these files.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCHS, SHAPES, applicable, for_shape, get_config
+from ..models.lm_common import LMConfig, init_params
+from ..models.transformer import (
+    init_cache,
+    layer_costs,
+    make_train_step,
+    prefill_step,
+    serve_step,
+    train_loss,
+)
+from ..optim import AdamW, AdamWConfig
+from .mesh import dp_axes_of, make_production_mesh
+from .shardings import (
+    batch_pspecs,
+    cache_pspecs,
+    opt_pspecs,
+    params_pspecs,
+    sanitize,
+    shaped,
+    to_named,
+)
+from jax.sharding import PartitionSpec as P
+
+OUT_DIR = Path(__file__).resolve().parents[3] / "experiments" / "dryrun"
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"(?P<kinds>(?:\w+\[[\d,]*\]\{[^}]*\}|\(\s*[^)]*\))\s*)"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<start>-start)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dtype)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def parse_collectives(hlo_text: str) -> list[dict]:
+    """Extract collective ops + per-device result bytes from partitioned HLO."""
+    out = []
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s*(.*?)\s*(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)(-start|-done)?\(", line)
+        if not m or (m.group(3) == "-done"):
+            continue
+        op = m.group(2)
+        lhs = m.group(1)
+        nbytes = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        gm = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if gm:
+            group = int(gm.group(2))
+        else:
+            gm2 = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+            group = len(gm2.group(1).split(",")) if gm2 else 1
+        # ring wire-bytes per device
+        if op == "all-gather":
+            wire = nbytes * (group - 1) / max(group, 1)
+        elif op == "all-reduce":
+            wire = 2 * nbytes * (group - 1) / max(group, 1)
+        elif op == "reduce-scatter":
+            wire = nbytes * (group - 1)  # result is the scattered shard
+        elif op == "all-to-all":
+            wire = nbytes * (group - 1) / max(group, 1)
+        else:  # collective-permute
+            wire = nbytes
+        out.append({"op": op, "bytes": nbytes, "group": group, "wire_bytes": wire})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStructs — never allocates)
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: LMConfig, shape_name: str, cell=None) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    cell = cell or SHAPES[shape_name]
+    B, S = cell.global_batch, cell.seq_len
+    i32 = jnp.int32
+
+    def sds(shape, dtype):
+        return jax.ShapeDtypeStruct(shape, dtype)
+
+    if cfg.is_encdec:
+        dec = min(S, cfg.max_decoder_len or S)
+        batch = {
+            "frames": sds((B, cfg.enc_frames, cfg.d_model), cfg.dtype),
+            "tokens": sds((B, dec), i32),
+        }
+        if cell.phase == "train":
+            batch["labels"] = sds((B, dec), i32)
+        return batch
+    if cfg.n_patches and cell.phase != "decode":
+        s_text = S - cfg.n_patches
+        batch = {
+            "tokens": sds((B, s_text), i32),
+            "patch_embeds": sds((B, cfg.n_patches, cfg.d_model), cfg.dtype),
+        }
+        if cell.phase == "train":
+            batch["labels"] = sds((B, s_text), i32)
+        return batch
+    batch = {"tokens": sds((B, S), i32)}
+    if cell.phase == "train":
+        batch["labels"] = sds((B, S), i32)
+    return batch
+
+
+def _maybe_dp(mesh, spec_tree, batch_size):
+    """Replicate the batch axis when it doesn't divide the DP extent."""
+    dp = dp_axes_of(mesh)
+    total = 1
+    for a in dp:
+        total *= mesh.shape[a]
+    if batch_size % total == 0:
+        return spec_tree
+    strip = lambda s: P(*(None if e == dp or e == list(dp) else e for e in s))
+    return jax.tree.map(
+        lambda s: strip(s) if isinstance(s, P) else s,
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+
+def _accum_for(cfg: LMConfig, cell) -> int:
+    """Gradient-accumulation depth for train cells (activation-memory fit)."""
+    if cell.phase != "train":
+        return 1
+    if cfg.d_model >= 8192:
+        return 8
+    if cfg.d_model >= 4096:
+        return 4
+    return 1
+
+
+def _scaled_depth(cfg: LMConfig, k: int) -> LMConfig:
+    """Config with k 'depth units' (hybrid: k groups; encdec: k enc+dec layers)."""
+    if cfg.block_kind == "hybrid":
+        return dataclasses.replace(cfg, n_layers=k * cfg.shared_attn_every)
+    if cfg.is_encdec:
+        return dataclasses.replace(cfg, n_layers=k, enc_layers=k)
+    return dataclasses.replace(cfg, n_layers=k)
+
+
+def _depth_units(cfg: LMConfig) -> int:
+    if cfg.block_kind == "hybrid":
+        return cfg.n_layers // cfg.shared_attn_every
+    return cfg.n_layers
+
+
+def _build_and_compile(cfg: LMConfig, cell, mesh, shape_name: str, accum: int = 1):
+    """jit + lower + compile the cell's step function. Returns compiled."""
+    dp = dp_axes_of(mesh)
+    params_sds = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    pspec = sanitize(mesh, params_sds, params_pspecs(cfg, mesh))
+    batch_sds = input_specs(cfg, shape_name, cell)
+    with mesh:
+        if cell.phase == "train":
+            opt = AdamW(AdamWConfig())
+            opt_sds = jax.eval_shape(opt.init, params_sds)
+            ospec = opt_pspecs(cfg, mesh, pspec)
+            bspec = _maybe_dp(mesh, batch_pspecs(cfg, mesh, batch_sds), cell.global_batch)
+            step = make_train_step(cfg, opt, mesh, dp, "model", accum=accum)
+            jitted = jax.jit(
+                step,
+                in_shardings=to_named(mesh, (pspec, ospec, bspec)),
+                out_shardings=to_named(
+                    mesh, (pspec, ospec, {"loss": P(), "lr": P(), "grad_norm": P()})
+                ),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif cell.phase == "prefill":
+            bspec = _maybe_dp(mesh, batch_pspecs(cfg, mesh, batch_sds), cell.global_batch)
+            cache_sds = jax.eval_shape(
+                lambda p, b: prefill_step(cfg, p, b, None, dp, "model"), params_sds, batch_sds
+            )[1]
+            cspec = sanitize(mesh, cache_sds, _maybe_dp(mesh, cache_pspecs(cfg, mesh, cache_sds), cell.global_batch))
+            lspec = P(dp, None) if cell.global_batch % _dptot(mesh) == 0 else P(None, None)
+            fn = lambda p, b: prefill_step(cfg, p, b, mesh, dp, "model")
+            jitted = jax.jit(
+                fn,
+                in_shardings=to_named(mesh, (pspec, bspec)),
+                out_shardings=to_named(mesh, (lspec, cspec)),
+            )
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            B, S = cell.global_batch, cell.seq_len
+            cache_sds = jax.eval_shape(lambda: init_cache(cfg, B, S))
+            cspec = sanitize(mesh, cache_sds, _maybe_dp(mesh, cache_pspecs(cfg, mesh, cache_sds), B))
+            tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+            tspec = P(dp, None) if B % _dptot(mesh) == 0 else P(None, None)
+            from ..models.transformer import serve_block
+
+            fn = lambda p, c, t: serve_block(cfg, p, c, t, mesh, dp, "model")
+            jitted = jax.jit(
+                fn,
+                in_shardings=to_named(mesh, (pspec, cspec, tspec)),
+                out_shardings=to_named(mesh, (P(tspec[0], None), cspec)),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(params_sds, cache_sds, tok_sds)
+
+        compiled = lowered.compile()
+    return compiled
+
+
+def _extract(compiled) -> dict:
+    """Pull flops / bytes / collective wire-bytes out of a compiled artifact."""
+    ca = compiled.cost_analysis() or {}
+    colls = parse_collectives(compiled.as_text())
+    by_op: dict[str, dict] = {}
+    for c in colls:
+        d = by_op.setdefault(c["op"], {"count": 0, "bytes": 0.0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["bytes"] += c["bytes"]
+        d["wire_bytes"] += c["wire_bytes"]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes": float(ca.get("bytes accessed", 0.0)),
+        "wire": sum(c["wire_bytes"] for c in colls),
+        "by_op": by_op,
+        "n_ops": len(colls),
+    }
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, out_dir: Path = OUT_DIR) -> dict:
+    runs, reason = applicable(arch, shape_name)
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": mesh_kind,
+        "runs": runs,
+        "reason": reason,
+    }
+    if not runs:
+        return rec
+
+    cfg = for_shape(get_config(arch), shape_name)
+    cell = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.size
+    t0 = time.time()
+
+    accum = _accum_for(cfg, cell)
+
+    # 1) full-config compile: the pass/fail gate + memory analysis + schedule
+    compiled = _build_and_compile(cfg, cell, mesh, shape_name, accum=accum)
+    full = _extract(compiled)
+    ma = compiled.memory_analysis()
+    t_full = time.time() - t0
+
+    if mesh_kind == "multi":
+        # the multi-pod pass proves the "pod" axis shards; the roofline
+        # table is single-pod only (assignment) — skip the fit compiles.
+        rec.update(
+            {
+                "phase": cell.phase,
+                "n_chips": n_chips,
+                "compile_s": round(t_full, 1),
+                "memory": {
+                    "argument_bytes_per_dev": ma.argument_size_in_bytes,
+                    "output_bytes_per_dev": ma.output_size_in_bytes,
+                    "temp_bytes_per_dev": ma.temp_size_in_bytes,
+                    "alias_bytes_per_dev": ma.alias_size_in_bytes,
+                    "peak_estimate_gib": round(
+                        (ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                        / 2**30, 3,
+                    ),
+                },
+                "cost": {"raw_uncorrected": {"flops_per_dev": full["flops"], "bytes_per_dev": full["bytes"], "wire": full["wire"]}},
+                "collectives": {"by_op_single_iteration": full["by_op"], "n_ops": full["n_ops"]},
+                "compiled_ok": True,
+            }
+        )
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}__{shape_name}__{mesh_kind}.json").write_text(json.dumps(rec, indent=2))
+        return rec
+
+    # 2) loop-trip-count correction.  XLA's cost analysis counts a while body
+    #    ONCE, so per-layer flops/bytes/collectives are undercounted by the
+    #    scan trip count.  Compile two reduced-depth variants with every scan
+    #    unrolled and fit cost(L) = a + b·L exactly (every loop in the model
+    #    scales with L; embedding/head/loss are the constant a).  Train cells
+    #    are measured on ONE microbatch and scaled by ``accum`` — each
+    #    microbatch is an identical subgraph (incl. its FSDP re-gathers), so
+    #    the step cost is accum × microbatch cost + O(optimizer), and the
+    #    optimizer update is noise at these scales.
+    k1, k2 = 1, 3
+    cell_m = dataclasses.replace(cell, global_batch=cell.global_batch // accum)
+    unrolled = lambda k: dataclasses.replace(_scaled_depth(cfg, k), scan_unroll=True)
+    c1 = _extract(_build_and_compile(unrolled(k1), cell_m, mesh, shape_name))
+    c2 = _extract(_build_and_compile(unrolled(k2), cell_m, mesh, shape_name))
+    L = _depth_units(cfg)
+
+    def fit(key):
+        b = (c2[key] - c1[key]) / (k2 - k1)
+        a = c1[key] - b * k1
+        return max(a + b * L, 0.0) * accum
+
+    flops_dev = fit("flops")
+    bytes_dev = fit("bytes")
+    wire = fit("wire")
+    model_flops = _model_flops(cfg, cell)
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = wire / LINK_BW
+    dominant = max(
+        ("compute", compute_s), ("memory", memory_s), ("collective", collective_s),
+        key=lambda kv: kv[1],
+    )[0]
+
+    rec.update(
+        {
+            "phase": cell.phase,
+            "n_chips": n_chips,
+            "compile_s": round(t_full, 1),
+            "total_s": round(time.time() - t0, 1),
+            "memory": {
+                "argument_bytes_per_dev": ma.argument_size_in_bytes,
+                "output_bytes_per_dev": ma.output_size_in_bytes,
+                "temp_bytes_per_dev": ma.temp_size_in_bytes,
+                "alias_bytes_per_dev": ma.alias_size_in_bytes,
+                "peak_estimate_gib": round(
+                    (ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+                    / 2**30, 3,
+                ),
+            },
+            "cost": {
+                "flops_per_dev": flops_dev,
+                "bytes_per_dev": bytes_dev,
+                "hlo_flops_global": flops_dev * n_chips,
+                "raw_uncorrected": {"flops_per_dev": full["flops"], "bytes_per_dev": full["bytes"], "wire": full["wire"]},
+            },
+            "collectives": {
+                "total_wire_bytes_per_dev": wire,
+                "by_op_single_iteration": full["by_op"],
+                "n_ops": full["n_ops"],
+            },
+            "roofline": {
+                "compute_s": compute_s,
+                "memory_s": memory_s,
+                "collective_s": collective_s,
+                "dominant": dominant,
+                "model_flops": model_flops,
+                "useful_flops_ratio": (model_flops / (flops_dev * n_chips)) if flops_dev else None,
+            },
+        }
+    )
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path = out_dir / f"{arch}__{shape_name}__{mesh_kind}.json"
+    out_path.write_text(json.dumps(rec, indent=2))
+    return rec
+
+
+def _dptot(mesh) -> int:
+    t = 1
+    for a in dp_axes_of(mesh):
+        t *= mesh.shape[a]
+    return t
+
+
+def _fake(sds_tree):
+    """SDS tree usable as eval_shape arguments."""
+    return sds_tree
+
+
+def _model_flops(cfg: LMConfig, cell) -> float:
+    """MODEL_FLOPS: 6·N·D train, 2·N·D forward-only (N = active params)."""
+    n_active = cfg.active_param_count()
+    if cell.phase == "train":
+        dec = min(cell.seq_len, cfg.max_decoder_len or cell.seq_len) if cfg.is_encdec else cell.seq_len
+        d_tokens = cell.global_batch * dec
+        return 6.0 * n_active * d_tokens
+    if cell.phase == "prefill":
+        dec = min(cell.seq_len, cfg.max_decoder_len or cell.seq_len) if cfg.is_encdec else cell.seq_len
+        return 2.0 * n_active * cell.global_batch * dec
+    return 2.0 * n_active * cell.global_batch  # decode: one token per sequence
+
+
+# ---------------------------------------------------------------------------
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCHS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", type=Path, default=OUT_DIR)
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    cells = (
+        [(a, s) for a in ARCHS for s in SHAPES]
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = 0
+    for arch, shape in cells:
+        for mk in meshes:
+            if args.skip_existing and (args.out / f"{arch}__{shape}__{mk}.json").exists():
+                print(f"[CACHED] {arch} {shape} {mk}")
+                continue
+            try:
+                rec = run_cell(arch, shape, mk, args.out)
+                if rec["runs"] and "roofline" not in rec:
+                    print(
+                        f"[OK] {arch:18s} {shape:12s} {mk:6s} compiled "
+                        f"mem/dev={rec['memory']['peak_estimate_gib']}GiB compile={rec['compile_s']}s"
+                    )
+                elif rec["runs"]:
+                    r = rec["roofline"]
+                    print(
+                        f"[OK] {arch:18s} {shape:12s} {mk:6s} "
+                        f"compute={r['compute_s']:.3e}s memory={r['memory_s']:.3e}s "
+                        f"collective={r['collective_s']:.3e}s dom={r['dominant']} "
+                        f"mem/dev={rec['memory']['peak_estimate_gib']}GiB "
+                        f"compile={rec['compile_s']}s"
+                    )
+                else:
+                    print(f"[SKIP] {arch:18s} {shape:12s} {mk:6s} — {rec['reason']}")
+            except Exception:
+                failures += 1
+                print(f"[FAIL] {arch} {shape} {mk}")
+                traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

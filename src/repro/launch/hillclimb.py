@@ -1,0 +1,135 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration harness: measure one dry-run cell under config overrides.
+
+Each §Perf iteration is: hypothesis -> override -> re-lower -> re-analyse.
+Overrides are LMConfig fields (attn_q_block, remat, scan knobs, dtypes via
+string) plus the accumulation depth; results print the three roofline terms
+next to the recorded baseline so the delta is immediate.
+
+  python -m repro.launch.hillclimb --arch qwen3-32b --shape train_4k \
+      --set attn_q_block=1024 --accum 8 --tag qblock1024
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax.numpy as jnp
+
+from ..configs import SHAPES, for_shape, get_config
+from ..models.lm_common import LMConfig
+from .dryrun import (
+    HBM_BW,
+    LINK_BW,
+    OUT_DIR,
+    PEAK_FLOPS,
+    _accum_for,
+    _build_and_compile,
+    _depth_units,
+    _extract,
+    _model_flops,
+    _scaled_depth,
+)
+from .mesh import make_production_mesh
+
+PERF_DIR = OUT_DIR.parent / "perf"
+
+_FIELD_TYPES = {f.name: f.type for f in dataclasses.fields(LMConfig)}
+
+
+def parse_overrides(pairs: list[str]) -> dict:
+    out = {}
+    for p in pairs:
+        k, v = p.split("=", 1)
+        if v in ("True", "False"):
+            out[k] = v == "True"
+        elif v in ("bf16", "f32"):
+            out[k] = jnp.bfloat16 if v == "bf16" else jnp.float32
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def measure(arch: str, shape: str, overrides: dict, accum: int | None = None, fast: bool = False) -> dict:
+    cfg = for_shape(get_config(arch), shape)
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh()
+    acc = accum if accum is not None else _accum_for(cfg, cell)
+
+    t0 = time.time()
+    ma = None
+    if not fast:  # fast mode: fit compiles only (terms, no memory analysis)
+        compiled = _build_and_compile(cfg, cell, mesh, shape, accum=acc)
+        ma = compiled.memory_analysis()
+
+    cell_m = dataclasses.replace(cell, global_batch=cell.global_batch // acc)
+    unrolled = lambda k: dataclasses.replace(_scaled_depth(cfg, k), scan_unroll=True)
+    c1 = _extract(_build_and_compile(unrolled(1), cell_m, mesh, shape))
+    c2 = _extract(_build_and_compile(unrolled(3), cell_m, mesh, shape))
+    L = _depth_units(cfg)
+
+    def fit(key):
+        b = (c2[key] - c1[key]) / 2.0
+        return max(c1[key] - b + b * L, 0.0) * acc
+
+    flops, bts, wire = fit("flops"), fit("bytes"), fit("wire")
+    return {
+        "arch": arch,
+        "shape": shape,
+        "overrides": {k: str(v) for k, v in overrides.items()},
+        "accum": acc,
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bts / HBM_BW,
+        "collective_s": wire / LINK_BW,
+        "mem_gib": round((ma.argument_size_in_bytes + ma.output_size_in_bytes + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 2) if ma else None,
+        "useful_ratio": _model_flops(cfg, cell) / (flops * mesh.size) if flops else None,
+        "wall_s": round(time.time() - t0, 1),
+        "by_op_1iter": c2["by_op"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--set", nargs="*", default=[], dest="overrides")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--tag", default="iter")
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+
+    rec = measure(args.arch, args.shape, parse_overrides(args.overrides), args.accum, fast=args.fast)
+
+    base_p = OUT_DIR / f"{args.arch}__{args.shape}__single.json"
+    if base_p.exists():
+        base = json.loads(base_p.read_text())
+        if "roofline" in base:
+            b = base["roofline"]
+            print(
+                f"baseline : compute={b['compute_s']:.3e} memory={b['memory_s']:.3e} "
+                f"collective={b['collective_s']:.3e} mem={base['memory']['peak_estimate_gib']}GiB "
+                f"useful={b['useful_flops_ratio']:.3f}"
+            )
+    print(
+        f"this run : compute={rec['compute_s']:.3e} memory={rec['memory_s']:.3e} "
+        f"collective={rec['collective_s']:.3e} mem={rec['mem_gib']}GiB "
+        f"useful={rec['useful_ratio']:.3f}  ({rec['wall_s']}s)", flush=True
+    )
+    PERF_DIR.mkdir(parents=True, exist_ok=True)
+    out = PERF_DIR / f"{args.arch}__{args.shape}__{args.tag}.json"
+    out.write_text(json.dumps(rec, indent=2))
+    print(f"saved {out}")
+
+
+if __name__ == "__main__":
+    main()

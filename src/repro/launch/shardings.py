@@ -1,0 +1,122 @@
+"""Sharding assignment for params / optimizer / batch / decode caches.
+
+Everything returns PartitionSpec pytrees matching the corresponding value
+trees; ``launch/dryrun.py`` wraps them in NamedShardings for jit.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.lm_common import LMConfig, param_shardings
+from .mesh import dp_axes_of
+
+
+def params_pspecs(cfg: LMConfig, mesh: Mesh) -> dict:
+    return param_shardings(cfg, fsdp_axis="data", tp_axis="model")
+
+
+def opt_pspecs(cfg: LMConfig, mesh: Mesh, params_spec: dict) -> dict:
+    return {
+        "step": P(),
+        "mu": params_spec,
+        "nu": params_spec,
+        "master": params_spec,
+    }
+
+
+def batch_pspecs(cfg: LMConfig, mesh: Mesh, batch: dict) -> dict:
+    dp = dp_axes_of(mesh)
+    return {k: P(dp, *([None] * (v.ndim - 1))) for k, v in batch.items()}
+
+
+def _divisible_axis(tp: int, *cands: tuple[int, int]) -> int | None:
+    """First candidate (axis, size) whose size divides evenly over tp."""
+    for axis, size in cands:
+        if size % tp == 0:
+            return axis
+    return None
+
+
+def cache_pspecs(cfg: LMConfig, mesh: Mesh, cache: dict) -> dict:
+    """Decode-cache shardings.
+
+    KV rings [L, b, W, kvh, hd]: batch over DP; then shard kv-heads over
+    ``model`` when divisible, else head_dim (contractions over a sharded
+    head_dim become psum'd partials — cheap at decode shapes), else
+    replicate.  SSM state [L, b, h, p, n]: same game over (h, p, n).
+    """
+    dp = dp_axes_of(mesh)
+    tp = mesh.shape["model"]
+    spec: dict = {}
+    for name, v in cache.items():
+        if name == "index":
+            spec[name] = P()
+        elif name in ("pos", "shared_pos"):
+            spec[name] = P(None, None)
+        elif name in ("k", "v", "shared_k", "shared_v", "cross_k", "cross_v"):
+            # flash-decode layout: the cache SEQUENCE axis is TP-sharded, so
+            # each model shard scores its slice of the context and only
+            # O(b·h) softmax statistics cross the wire — KV-head or head-dim
+            # sharding would all-reduce O(b·h·W) score panels instead.
+            ax = 2 if v.shape[2] % tp == 0 else _divisible_axis(tp, (3, v.shape[3]), (4, v.shape[4]))
+            parts = [None, dp, None, None, None]
+            if ax is not None:
+                parts[ax] = "model"
+            spec[name] = P(*parts)
+        elif name == "ssm":  # [L, b, h, p, n]
+            ax = _divisible_axis(tp, (2, v.shape[2]), (3, v.shape[3]), (4, v.shape[4]))
+            parts = [None, dp, None, None, None]
+            if ax is not None:
+                parts[ax] = "model"
+            spec[name] = P(*parts)
+        elif name == "conv":  # [L, b, 3, ch]
+            ax = _divisible_axis(tp, (3, v.shape[3]),)
+            parts = [None, dp, None, None]
+            if ax is not None:
+                parts[ax] = "model"
+            spec[name] = P(*parts)
+        else:
+            raise KeyError(name)
+    return spec
+
+
+def sanitize(mesh: Mesh, sds_tree, spec_tree):
+    """Drop mesh axes from dims they don't divide evenly.
+
+    jit in_shardings require exact divisibility (unlike constraints), and
+    the assigned configs are full of awkward extents — whisper's vocab
+    51865, mamba2's fused in_proj 3352.  Such dims fall back to replicated.
+    """
+
+    def fix(sds, spec):
+        if not isinstance(spec, P):
+            return spec
+        parts = []
+        for i, el in enumerate(spec):
+            if el is None:
+                parts.append(None)
+                continue
+            axes = el if isinstance(el, (tuple, list)) else (el,)
+            extent = 1
+            for a in axes:
+                extent *= mesh.shape[a]
+            parts.append(el if sds.shape[i] % extent == 0 else None)
+        return P(*parts)
+
+    return jax.tree.map(fix, sds_tree, spec_tree)
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def shaped(tree):
+    """Value pytree -> ShapeDtypeStruct pytree (no allocation)."""
+    return jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)

@@ -1,0 +1,60 @@
+"""Full dry-run sweep driver: one subprocess per cell (fresh XLA state,
+bounded memory), resumable via --skip-existing semantics."""
+
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[3]
+OUT = REPO / "experiments" / "dryrun"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="both")
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    sys.path.insert(0, str(REPO / "src"))
+    from repro.configs import ARCHS, SHAPES
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    failures = []
+    for mk in meshes:
+        for arch in ARCHS:
+            for shape in SHAPES:
+                out = OUT / f"{arch}__{shape}__{mk}.json"
+                if out.exists():
+                    print(f"[cached] {arch} {shape} {mk}", flush=True)
+                    continue
+                t0 = time.time()
+                try:
+                    r = subprocess.run(
+                    [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch, "--shape", shape, "--mesh", mk],
+                    cwd=REPO,
+                    env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"},
+                        capture_output=True,
+                        text=True,
+                        timeout=args.timeout,
+                    )
+                except subprocess.TimeoutExpired:
+                    failures.append((arch, shape, mk, "timeout"))
+                    print(f"[TIMEOUT] {arch} {shape} {mk} after {args.timeout}s", flush=True)
+                    continue
+                tail = (r.stdout + r.stderr).strip().splitlines()
+                line = next((l for l in reversed(tail) if l.startswith("[")), "?")
+                print(f"{line}   ({time.time() - t0:.0f}s)", flush=True)
+                if r.returncode != 0:
+                    failures.append((arch, shape, mk))
+                    print("\n".join(tail[-12:]), flush=True)
+    print(f"sweep done; {len(failures)} failures: {failures}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+from .adamw import AdamW, AdamWConfig, cosine_schedule
+from .grad_compress import compressed_psum, dequantize, quantize_int8
+
+__all__ = [
+    "AdamW",
+    "AdamWConfig",
+    "cosine_schedule",
+    "compressed_psum",
+    "dequantize",
+    "quantize_int8",
+]

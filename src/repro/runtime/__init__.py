@@ -1,0 +1,3 @@
+from .fault import ElasticScheduler, StragglerMitigator, TrainSupervisor
+
+__all__ = ["ElasticScheduler", "StragglerMitigator", "TrainSupervisor"]

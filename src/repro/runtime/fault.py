@@ -1,0 +1,162 @@
+"""Fault tolerance & elasticity — Shisha doubles as the runtime scheduler.
+
+This is the "first-class feature" integration (DESIGN.md §5): the paper's
+online tuner is not just an offline experiment, it is the mechanism the
+runtime uses to respond to the two failure modes a 1000-node job actually
+sees:
+
+  * **Stragglers** — a stage's EP slows down (thermals, a sick host, a
+    shared-link neighbour).  :class:`StragglerMitigator` watches measured
+    stage times; when the max/median imbalance crosses a threshold it
+    derates the offending EP in the platform model and warm-starts
+    Algorithm 2 *from the current configuration* (no re-seed — the current
+    conf is by construction near-optimal for the old derates, which is
+    exactly the warm-start Alg. 2 wants).
+
+  * **Node loss / elastic rescale** — an EP disappears (or arrives).
+    :class:`ElasticScheduler` rebuilds the platform, re-runs Algorithm 1's
+    seed on the surviving EPs, and tunes from there; together with the
+    step-addressed checkpoint store and counter-based data pipeline this
+    gives deterministic resume on the new topology.
+
+  * **Step-level faults** — :class:`TrainSupervisor` wraps a train loop
+    with checkpoint/restore (async saves every ``save_every``), NaN-loss
+    quarantine (skip + re-restore), and restart bookkeeping.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..core.config import PipelineConfig
+from ..core.evaluator import Trace
+from ..core.platform import Platform
+from ..core.seed import generate_seed
+from ..core.tuner import TuneResult, tune
+from ..checkpoint.store import CheckpointStore
+
+
+# ---------------------------------------------------------------------------
+# Straggler mitigation (paper Alg. 2 as the runtime rebalancer)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StragglerMitigator:
+    platform: Platform
+    conf: PipelineConfig
+    make_trace: Callable[[Platform], Trace]
+    imbalance_threshold: float = 1.5
+    alpha: int = 10
+
+    def check(self, measured_stage_times: Sequence[float]) -> tuple[bool, int | None]:
+        """(should_rebalance, straggler_stage)."""
+        t = np.asarray(measured_stage_times, float)
+        med = float(np.median(t))
+        worst = int(np.argmax(t))
+        if med <= 0:
+            return False, None
+        return bool(t[worst] / med > self.imbalance_threshold), worst
+
+    def derate_factor(self, measured_stage_times: Sequence[float], stage: int) -> float:
+        t = np.asarray(measured_stage_times, float)
+        med = float(np.median(t))
+        return float(t[stage] / max(med, 1e-12))
+
+    def rebalance(self, measured_stage_times: Sequence[float]) -> tuple[PipelineConfig, TuneResult] | None:
+        """Detect a straggler, derate its EP, warm-start Alg. 2."""
+        hit, stage = self.check(measured_stage_times)
+        if not hit:
+            return None
+        ep_idx = self.conf.eps[stage]
+        factor = self.derate_factor(measured_stage_times, stage)
+        import dataclasses as dc
+
+        eps = list(self.platform.eps)
+        ep = eps[ep_idx]
+        eps[ep_idx] = dc.replace(
+            ep,
+            flops_per_core=ep.flops_per_core / factor,
+            mem_bw=ep.mem_bw / factor,
+            perf_class=ep.perf_class + 1,  # demote: no longer a "fast" EP
+        )
+        derated = dc.replace(self.platform, name=f"{self.platform.name}*", eps=tuple(eps))
+        trace = self.make_trace(derated)
+        result = tune(self.conf, trace, alpha=self.alpha)  # warm start from current conf
+        self.platform = derated
+        self.conf = result.best_conf
+        return result.best_conf, result
+
+
+# ---------------------------------------------------------------------------
+# Elastic rescale (node loss / arrival)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ElasticScheduler:
+    platform: Platform
+    weights: Sequence[float]
+    make_trace: Callable[[Platform], Trace]
+    alpha: int = 10
+
+    def on_topology_change(self, dead_eps: Sequence[int] = (), n_stages: int | None = None):
+        """Re-seed (Alg. 1) + tune (Alg. 2) on the surviving EPs."""
+        if len(set(dead_eps)) >= self.platform.n_eps:
+            raise RuntimeError("no EPs left")
+        platform = self.platform.without(dead_eps) if dead_eps else self.platform
+        trace = self.make_trace(platform)
+        seed = generate_seed(self.weights, platform, n_stages=n_stages, choice="rank_w")
+        result = tune(seed, trace, alpha=self.alpha)
+        self.platform = platform
+        return result.best_conf, result
+
+
+# ---------------------------------------------------------------------------
+# Step-level supervision
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TrainSupervisor:
+    """Checkpointed train loop with NaN quarantine and crash resume."""
+
+    store: CheckpointStore
+    save_every: int = 50
+    max_restores: int = 3
+
+    def run(
+        self,
+        state: dict,
+        step_fn: Callable[[dict, int], tuple[dict, float]],
+        n_steps: int,
+        start_step: int = 0,
+    ) -> tuple[dict, list[float]]:
+        losses: list[float] = []
+        restores = 0
+        step = start_step
+        last_good = start_step
+        while step < n_steps:
+            state_new, loss = step_fn(state, step)
+            if not math.isfinite(loss):
+                if restores >= self.max_restores:
+                    raise RuntimeError(f"NaN loss at step {step}, restores exhausted")
+                restored = self.store.restore_latest(state)
+                if restored is None:
+                    raise RuntimeError(f"NaN loss at step {step}, no checkpoint to restore")
+                last_good, state = restored
+                step = last_good
+                restores += 1
+                continue
+            state = state_new
+            losses.append(float(loss))
+            step += 1
+            if step % self.save_every == 0 or step == n_steps:
+                self.store.save(step, state, async_=True)
+                last_good = step
+        self.store.wait()
+        return state, losses

@@ -1,0 +1,179 @@
+"""Unit + property tests for the paper's core algorithms (Alg. 1 + Alg. 2)."""
+
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AnalyticEvaluator,
+    DatabaseEvaluator,
+    PipelineConfig,
+    Trace,
+    conv_layer,
+    generate_seed,
+    merge_layers,
+    paper_platform,
+    pick_target,
+    run_shisha,
+    table3_platform,
+    tune,
+    weights,
+)
+from repro.models.cnn import network_layers
+
+# ---------------------------------------------------------------------------
+# Eq. 1 / layer tables
+# ---------------------------------------------------------------------------
+
+
+def test_eq1_conv_weight():
+    l = conv_layer("c", 14, 14, 256, 3, 3, 512)
+    assert l.flops == 2.0 * 14 * 14 * 256 * 3 * 3 * 512
+
+
+@pytest.mark.parametrize(
+    "net,n", [("resnet50", 50), ("yolov3", 52), ("synthnet", 18), ("alexnet", 5)]
+)
+def test_network_layer_counts(net, n):
+    layers = network_layers(net)
+    assert len(layers) == n
+    assert all(l.flops > 0 and l.bytes_mem > 0 for l in layers)
+
+
+def test_synthnet_channel_chaining():
+    from repro.models.cnn import synthnet_specs
+
+    specs = synthnet_specs(18)
+    # repetition r>0 starts from the previous block's output channels
+    assert specs[5].c_in == specs[4].k
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 (seed generation)
+# ---------------------------------------------------------------------------
+
+w_lists = st.lists(st.floats(1.0, 1e6), min_size=2, max_size=40)
+
+
+@given(w_lists, st.integers(1, 8))
+@settings(max_examples=200, deadline=None)
+def test_merge_layers_properties(ws, n):
+    n = min(n, len(ws))
+    groups = merge_layers(ws, n)
+    assert len(groups) == n
+    flat = [i for g in groups for i in g]
+    assert flat == list(range(len(ws)))  # contiguity + completeness
+    assert all(len(g) >= 1 for g in groups)
+
+
+def test_merge_prefers_lighter_neighbour():
+    # lightest is index 1 (1.0); lighter neighbour is index 0 (2.0) not 2 (9.)
+    groups = merge_layers([2.0, 1.0, 9.0, 9.0], 3)
+    assert groups[0] == [0, 1]
+
+
+@given(w_lists)
+@settings(max_examples=100, deadline=None)
+def test_seed_is_valid_config(ws):
+    plat = paper_platform(8)
+    seed = generate_seed(ws, plat)
+    conf = seed.conf
+    assert conf.n_layers == len(ws)
+    assert len(set(conf.eps)) == conf.depth  # injective EP assignment
+    assert conf.depth == min(8, len(ws))
+
+
+def test_rank_w_assigns_heavy_to_fast():
+    plat = paper_platform(4)  # EPs 0,1 fast; 2,3 slow
+    ws = [100.0, 1.0, 1.0, 1.0]
+    seed = generate_seed(ws, plat, n_stages=4, choice="rank_w")
+    heavy_stage = max(range(4), key=lambda s: ws[s])
+    ranked = plat.ranked()
+    assert seed.conf.eps[heavy_stage] == ranked[0]
+
+
+def test_rank_l_assigns_many_layers_to_slow():
+    plat = paper_platform(4)
+    ws = [1.0] * 10
+    seed = generate_seed(ws, plat, n_stages=3, choice="rank_l")
+    sizes = seed.conf.stages
+    ranked = plat.ranked()
+    # the stage holding the slowest assigned EP must be a max-size stage
+    slowest_stage = max(range(3), key=lambda s: ranked.index(seed.conf.eps[s]))
+    assert sizes[slowest_stage] == max(sizes)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 (online tuning)
+# ---------------------------------------------------------------------------
+
+
+def _trace(net="synthnet", n_eps=4, db=True):
+    layers = network_layers(net)
+    plat = paper_platform(n_eps)
+    ev = (DatabaseEvaluator if db else AnalyticEvaluator)(plat, layers)
+    return layers, plat, Trace(ev)
+
+
+def test_tune_never_worse_than_seed():
+    layers, plat, trace = _trace()
+    seed = generate_seed(weights(layers), plat)
+    seed_tp = trace.evaluator.throughput(seed.conf)
+    res = tune(seed, trace, alpha=10)
+    assert res.best_throughput >= seed_tp - 1e-12
+
+
+def test_tune_terminates_and_counts_alpha():
+    layers, plat, trace = _trace()
+    seed = generate_seed(weights(layers), plat)
+    res = tune(seed, trace, alpha=3)
+    assert trace.n_trials <= 10_000
+    assert res.best_conf.n_layers == len(layers)
+
+
+def test_pick_target_prefers_fast_eps():
+    plat = paper_platform(4)
+    conf = PipelineConfig(stages=(5, 5, 4, 4), eps=(2, 3, 0, 1))  # slow EPs first
+    times = [10.0, 1.0, 1.0, 1.0]
+    t = pick_target(conf, times, 0, plat, "nlfep")
+    assert conf.eps[t] in plat.feps
+
+
+def test_shisha_explores_tiny_fraction():
+    """Paper: ~0.1% of design space for ResNet50-scale networks."""
+    from repro.core import space_size
+
+    layers, plat, trace = _trace("resnet50", 8)
+    res = run_shisha(weights(layers), trace, "H3")
+    frac = trace.n_trials / space_size(len(layers), 8)
+    assert frac < 1e-6  # far below even the paper's 0.1%
+    assert 5 <= trace.n_trials <= 200
+
+
+@pytest.mark.parametrize("heuristic", ["H1", "H2", "H3", "H4", "H5", "H6"])
+def test_all_heuristics_run(heuristic):
+    layers, plat, trace = _trace()
+    res = run_shisha(weights(layers), trace, heuristic, rng=random.Random(0))
+    assert res.result.best_throughput > 0
+
+
+def test_stage_collapse_frees_ep():
+    """Moving the last layer out of a stage shrinks the pipeline depth."""
+    from repro.core.tuner import _move_toward
+
+    conf = PipelineConfig(stages=(1, 5), eps=(0, 1))
+    out = _move_toward(conf, 0, 1)
+    assert out.depth == 1 and out.stages == (6,) and out.eps == (1,)
+
+
+# ---------------------------------------------------------------------------
+# Table 3 platforms
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("conf,n", [("C1", 2), ("C2", 4), ("C3", 6), ("C4", 6), ("C5", 8)])
+def test_table3_platforms(conf, n):
+    p = table3_platform(conf)
+    assert p.n_eps == n
+    assert len(p.feps) >= 1 and len(p.seps) >= 1

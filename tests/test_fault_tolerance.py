@@ -1,0 +1,91 @@
+"""Fault tolerance: straggler rebalance, elastic rescale, NaN quarantine."""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointStore
+from repro.core import DatabaseEvaluator, Trace, generate_seed, paper_platform, tune, weights
+from repro.models.cnn import network_layers
+from repro.runtime import ElasticScheduler, StragglerMitigator, TrainSupervisor
+
+
+def _make_trace_factory(layers):
+    return lambda platform: Trace(DatabaseEvaluator(platform, layers))
+
+
+def test_straggler_detection_threshold():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    seed = generate_seed(weights(layers), plat)
+    mit = StragglerMitigator(plat, seed.conf, _make_trace_factory(layers))
+    ok, _ = mit.check([1.0, 1.0, 1.05, 1.0])
+    assert not ok
+    hit, stage = mit.check([1.0, 1.0, 4.0, 1.0])
+    assert hit and stage == 2
+
+
+def test_straggler_rebalance_improves_modeled_throughput():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    trace0 = Trace(DatabaseEvaluator(plat, layers))
+    seed = generate_seed(weights(layers), plat)
+    base = tune(seed, trace0)
+    mit = StragglerMitigator(plat, base.best_conf, _make_trace_factory(layers))
+
+    # EP of stage 0 becomes 3x slower
+    times = trace0.evaluator.stage_times(base.best_conf)
+    times[0] *= 3.0
+    out = mit.rebalance(times)
+    assert out is not None
+    new_conf, result = out
+    # rebalanced schedule beats keeping the old schedule on the derated platform
+    derated_ev = Trace(DatabaseEvaluator(mit.platform, layers)).evaluator
+    assert derated_ev.throughput(new_conf) >= derated_ev.throughput(base.best_conf) - 1e-12
+
+
+def test_elastic_rescale_survives_ep_loss():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    el = ElasticScheduler(plat, weights(layers), _make_trace_factory(layers))
+    conf, res = el.on_topology_change(dead_eps=[1])
+    assert el.platform.n_eps == 3
+    assert conf.depth <= 3
+    assert all(ep < 3 for ep in conf.eps)
+    assert res.best_throughput > 0
+
+
+def test_elastic_all_dead_raises():
+    layers = network_layers("synthnet")
+    plat = paper_platform(2)
+    el = ElasticScheduler(plat, weights(layers), _make_trace_factory(layers))
+    with pytest.raises(RuntimeError):
+        el.on_topology_change(dead_eps=[0, 1])
+
+
+def test_supervisor_nan_quarantine(tmp_path):
+    store = CheckpointStore(tmp_path)
+    calls = {"n": 0}
+
+    def step_fn(state, step):
+        calls["n"] += 1
+        v = state["x"] + 1.0
+        # poison exactly one step the first time it is reached
+        if step == 4 and calls["n"] < 8:
+            return {"x": v}, float("nan")
+        return {"x": v}, float(v)
+
+    sup = TrainSupervisor(store=store, save_every=2, max_restores=3)
+    state, losses = sup.run({"x": jnp.asarray(0.0)}, step_fn, n_steps=6)
+    assert len(losses) == 6 or math.isfinite(losses[-1])
+    assert all(math.isfinite(l) for l in losses)
+    assert float(state["x"]) >= 6.0 - 1e-6
+
+
+def test_supervisor_checkpoints_written(tmp_path):
+    store = CheckpointStore(tmp_path)
+    sup = TrainSupervisor(store=store, save_every=2)
+    state, losses = sup.run({"x": jnp.asarray(0.0)}, lambda s, t: ({"x": s["x"] + 1}, 1.0), n_steps=5)
+    assert store.steps()  # saved at 2, 4, 5 (minus GC)

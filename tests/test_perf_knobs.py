@@ -1,0 +1,90 @@
+"""The §Perf knobs must not change model semantics (only layout/schedule).
+
+Each knob flips an execution strategy; the math — loss values, decode
+logits — must be preserved (bf16 scores excepted: it trades precision and
+is tested with a loose bound).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.models.lm_common import init_params
+from repro.models.transformer import train_loss
+
+KEY = jax.random.PRNGKey(11)
+
+
+def _loss(cfg, params, batch):
+    return float(jax.jit(lambda p, b: train_loss(cfg, p, b))(params, batch))
+
+
+def _setup(arch="qwen3-32b"):
+    cfg = dataclasses.replace(get_smoke(arch), dtype=jnp.float32)
+    params = init_params(cfg, KEY)
+    batch = {
+        "tokens": jax.random.randint(KEY, (2, 32), 0, cfg.vocab),
+        "labels": jax.random.randint(KEY, (2, 32), 0, cfg.vocab),
+    }
+    return cfg, params, batch
+
+
+def test_repeat_kv_preserves_loss():
+    cfg, params, batch = _setup()
+    base = _loss(cfg, params, batch)
+    opt = _loss(dataclasses.replace(cfg, attn_repeat_kv=True), params, batch)
+    assert abs(base - opt) < 1e-5, (base, opt)
+
+
+def test_sp_residuals_flag_preserves_loss():
+    cfg, params, batch = _setup("granite-3-2b")
+    base = _loss(cfg, params, batch)
+    opt = _loss(dataclasses.replace(cfg, sp_residuals=False), params, batch)
+    assert abs(base - opt) < 1e-5
+
+
+def test_attn_q_block_preserves_loss():
+    cfg, params, batch = _setup("granite-3-2b")
+    base = _loss(dataclasses.replace(cfg, attn_q_block=8), params, batch)
+    opt = _loss(dataclasses.replace(cfg, attn_q_block=16), params, batch)
+    assert abs(base - opt) < 1e-5
+
+
+def test_bf16_scores_close():
+    cfg, params, batch = _setup("granite-3-2b")
+    base = _loss(cfg, params, batch)
+    lo = _loss(dataclasses.replace(cfg, attn_fp32_scores=False), params, batch)
+    assert abs(base - lo) < 0.05  # precision trade, not semantics
+
+
+def test_accum_dtype_bf16_close():
+    from repro.models.transformer import make_train_step
+    from repro.optim import AdamW, AdamWConfig
+
+    cfg, params, batch = _setup("granite-3-2b")
+    opt = AdamW(AdamWConfig(total_steps=10, warmup=2, moment_dtype=jnp.float32))
+    st = opt.init(params)
+    _, _, m32 = jax.jit(make_train_step(cfg, opt, accum=2))(params, st, batch)
+    cfgb = dataclasses.replace(cfg, accum_dtype=jnp.bfloat16)
+    _, _, mbf = jax.jit(make_train_step(cfgb, opt, accum=2))(params, st, batch)
+    assert abs(float(m32["loss"]) - float(mbf["loss"])) < 0.02
+
+
+def test_repeat_kv_decode_consistency():
+    """Decode path is unaffected (repeat_kv only changes full-seq attention)."""
+    from repro.models.transformer import init_cache, serve_step
+
+    cfg, params, _ = _setup("qwen3-32b")
+    cfg2 = dataclasses.replace(cfg, attn_repeat_kv=True)
+    toks = jax.random.randint(jax.random.PRNGKey(5), (1, 6), 0, cfg.vocab)
+    for c in (cfg, cfg2):
+        cache = init_cache(c, 1, 8)
+        for t in range(6):
+            lg, cache = serve_step(c, params, cache, toks[:, t : t + 1])
+        if c is cfg:
+            ref = lg
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(ref), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,63 @@
+"""Design-space accounting + PipelineConfig invariants (property tests)."""
+
+import itertools
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PipelineConfig, compositions, enumerate_configs, random_config, space_size
+import random
+
+
+@given(st.integers(2, 10), st.integers(1, 5))
+@settings(max_examples=60, deadline=None)
+def test_compositions_count_and_validity(L, d):
+    d = min(d, L)
+    comps = list(compositions(L, d))
+    import math
+
+    assert len(comps) == math.comb(L - 1, d - 1)
+    for c in comps:
+        assert sum(c) == L and all(x >= 1 for x in c)
+
+
+@given(st.integers(2, 7), st.integers(2, 5))
+@settings(max_examples=30, deadline=None)
+def test_space_size_matches_enumeration(L, E):
+    assert space_size(L, E) == sum(1 for _ in enumerate_configs(L, E))
+
+
+@given(st.integers(0, 10_000), st.integers(4, 30), st.integers(2, 6))
+@settings(max_examples=100, deadline=None)
+def test_random_config_valid(seed, L, E):
+    conf = random_config(random.Random(seed), L, E)
+    assert conf.n_layers == L
+    assert len(set(conf.eps)) == conf.depth <= E
+
+
+@given(st.integers(0, 5000))
+@settings(max_examples=100, deadline=None)
+def test_move_layer_preserves_invariants(seed):
+    rng = random.Random(seed)
+    conf = random_config(rng, 12, 4)
+    for cand in conf.neighbours():
+        assert cand.n_layers == 12
+        assert len(set(cand.eps)) == cand.depth
+
+
+def test_duplicate_ep_rejected():
+    with pytest.raises(ValueError):
+        PipelineConfig(stages=(1, 1), eps=(0, 0))
+
+
+def test_empty_stage_rejected():
+    with pytest.raises(ValueError):
+        PipelineConfig(stages=(0, 2), eps=(0, 1))
+
+
+def test_boundaries_and_stage_of_layer():
+    conf = PipelineConfig(stages=(2, 3, 1), eps=(0, 1, 2))
+    assert conf.boundaries() == [(0, 2), (2, 5), (5, 6)]
+    assert conf.stage_of_layer(0) == 0
+    assert conf.stage_of_layer(4) == 1
+    assert conf.stage_of_layer(5) == 2

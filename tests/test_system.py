@@ -1,0 +1,84 @@
+"""End-to-end system behaviour: training convergence, resume, paper claims."""
+
+import math
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke
+from repro.core import (
+    DatabaseEvaluator,
+    Trace,
+    exhaustive_search,
+    run_shisha,
+    weights,
+)
+from repro.launch.train import train
+from repro.models.cnn import network_layers
+from repro.core.platform import paper_platform
+
+
+def test_training_reduces_loss():
+    cfg = get_smoke("qwen2-0.5b")
+    out = train(cfg, steps=25, batch=4, seq=32, log_every=0)
+    losses = out["losses"]
+    first = sum(losses[:5]) / 5
+    last = sum(losses[-5:]) / 5
+    assert last < first - 0.2, (first, last)
+    assert all(math.isfinite(l) for l in losses)
+
+
+def test_training_resumes_exactly(tmp_path):
+    """Crash/restart mid-run continues the same trajectory (fault tolerance)."""
+    cfg = get_smoke("granite-3-2b")
+    full = train(cfg, steps=12, batch=2, seq=16, ckpt_dir=tmp_path / "a", save_every=6, log_every=0)
+    # run 1: first 6 steps only (simulated crash at step 6); same LR horizon
+    part = train(cfg, steps=6, schedule_steps=12, batch=2, seq=16, ckpt_dir=tmp_path / "b", save_every=6, log_every=0)
+    resumed = train(cfg, steps=12, batch=2, seq=16, ckpt_dir=tmp_path / "b", save_every=6, log_every=0)
+    np.testing.assert_allclose(
+        np.asarray(full["losses"][6:]), np.asarray(resumed["losses"]), rtol=2e-4, atol=2e-4
+    )
+
+
+def test_shisha_matches_exhaustive_search_quality():
+    """Paper Fig. 5: Shisha's solution ~= ES while exploring a tiny fraction."""
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    ev = DatabaseEvaluator(plat, layers)
+    es = exhaustive_search(Trace(ev), len(layers), max_depth=3)
+    sh = run_shisha(weights(layers), Trace(ev), "H3", n_stages=3)
+    ratio = sh.result.best_throughput / es.best_throughput
+    assert ratio >= 0.9, ratio
+    assert sh.trace.n_trials < 0.01 * es.n_explored
+
+
+def test_shisha_converges_faster_than_baselines():
+    """Paper Fig. 4: convergence wall-clock advantage (same cost accounting)."""
+    from repro.core import hill_climbing, simulated_annealing
+
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    ws = weights(layers)
+
+    sh = run_shisha(ws, Trace(DatabaseEvaluator(plat, layers)), "H3")
+    t_sh = sh.trace.wall
+    target = sh.result.best_throughput
+
+    def time_to_reach(trace):
+        for t in trace.trials:
+            pass
+        best = 0.0
+        for t in trace.trials:
+            best = max(best, t.throughput)
+            if best >= 0.95 * target:
+                return t.t_wall
+        return float("inf")
+
+    tr_hc = Trace(DatabaseEvaluator(plat, layers))
+    hill_climbing(tr_hc, len(ws), budget_s=60 * t_sh)
+    tr_sa = Trace(DatabaseEvaluator(plat, layers))
+    simulated_annealing(tr_sa, len(ws), budget_s=60 * t_sh)
+    # Shisha reaches its solution faster than HC/SA reach 95% of it
+    assert t_sh < min(time_to_reach(tr_hc), time_to_reach(tr_sa)) * 1.01
