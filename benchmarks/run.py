@@ -20,7 +20,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import fig4_convergence, fig5_quality, fig6_seed, fig7_heuristics, fig9_latency
-    from . import kernels_bench, roofline
+    from . import kernels_bench, roofline, serve_sim
 
     figures = {
         "fig4": fig4_convergence.run,
@@ -30,6 +30,7 @@ def main() -> None:
         "fig9": fig9_latency.run,
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
+        "serve_sim": lambda: serve_sim.run(quick=args.quick),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -1,0 +1,204 @@
+"""Serving-simulator harness: static vs continuous Shisha, multi-tenancy.
+
+    PYTHONPATH=src python -m benchmarks.serve_sim [--quick]
+
+Two experiments, both fully deterministic (seeded traffic, database oracle):
+
+  (a) **drift** — SynthNet on the paper's 8-EP big/LITTLE platform under
+      Poisson traffic at 50% of tuned capacity.  At ``fault_t`` the EP
+      hosting the bottleneck stage becomes 3x slower (thermal straggler).
+      *static* keeps the launch-time schedule; *continuous* detects the
+      drift, re-runs Algorithm 2 against the derated platform model —
+      paying the full exploration wall-clock on the simulated timeline —
+      and installs the recovered schedule.
+
+  (b) **multitenant** — SynthNet + ResNet50 co-scheduled on one 8-EP
+      platform via disjoint EP partitions (interleaved / blocked /
+      proportional), compared against SynthNet serving alone on the full
+      platform under the same traffic.
+
+Reported per arm: p50/p95/p99 latency, SLO-violation rate, throughput;
+JSON payload lands in experiments/benchmarks/serve_sim.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import DatabaseEvaluator, Trace, paper_platform, weights
+from repro.core.heuristics import run_shisha
+from repro.models.cnn import network_layers
+from repro.serve import (
+    ContinuousShisha,
+    MMPPTraffic,
+    PoissonTraffic,
+    ServingSimulator,
+    SimResult,
+    Tenant,
+    co_schedule,
+)
+
+from .common import save
+
+
+def _metrics(res: SimResult) -> dict:
+    return {
+        "n_arrived": res.n_arrived,
+        "n_completed": res.n_completed,
+        "throughput_rps": res.throughput_rps,
+        "p50_s": res.p50,
+        "p95_s": res.p95,
+        "p99_s": res.p99,
+        "p95_wait_s": res.p95_wait,
+        "slo_s": res.slo,
+        "slo_violation_rate": res.slo_rate,
+        "occupancy": res.occupancy,
+        "reconfigs": res.reconfigs,
+    }
+
+
+def _print_arm(name: str, res: SimResult, verbose: bool) -> None:
+    if verbose:
+        print(
+            f"  serve_sim {name:22s} tp={res.throughput_rps:6.2f}/s "
+            f"p50={res.p50 * 1e3:8.0f}ms p95={res.p95 * 1e3:8.0f}ms "
+            f"p99={res.p99 * 1e3:8.0f}ms slo_viol={res.slo_rate * 100:5.1f}%"
+        )
+
+
+def drift_scenario(quick: bool, verbose: bool) -> dict:
+    """(a) EP slowdown: static Shisha vs continuous Shisha."""
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    ev = DatabaseEvaluator(plat, layers)
+    sh = run_shisha(weights(layers), Trace(ev), "H3")
+    conf, cap = sh.result.best_conf, sh.result.best_throughput
+    fill = sum(ev.stage_times(conf))
+    slo = 3.0 * fill
+    horizon = 200.0 if quick else 400.0
+    fault_t = 40.0 if quick else 60.0
+    traffic = PoissonTraffic(rate=0.5 * cap, seed=1)
+    times = ev.stage_times(conf)
+    bad_ep = conf.eps[max(range(conf.depth), key=times.__getitem__)]
+
+    results = {}
+    for arm in ("static", "continuous"):
+        tuner = (
+            ContinuousShisha(
+                plat, layers, make_evaluator=lambda p: DatabaseEvaluator(p, layers)
+            )
+            if arm == "continuous"
+            else None
+        )
+        sim = ServingSimulator(ev, conf, slo=slo, autotuner=tuner)
+        sim.schedule_slowdown(fault_t, bad_ep, 3.0)
+        res = sim.run(traffic.arrivals(horizon), horizon)
+        results[arm] = res
+        _print_arm(f"drift/{arm}", res, verbose)
+
+    st, co = results["static"], results["continuous"]
+    beats = co.throughput_rps > st.throughput_rps and co.slo_rate < st.slo_rate
+    if verbose:
+        print(f"  serve_sim drift: continuous beats static: {beats}")
+    return {
+        "net": "synthnet",
+        "n_eps": 8,
+        "capacity_rps": cap,
+        "slo_s": slo,
+        "horizon_s": horizon,
+        "fault": {"t": fault_t, "ep": bad_ep, "slowdown": 3.0},
+        "static": _metrics(st),
+        "continuous": _metrics(co),
+        "continuous_beats_static": beats,
+    }
+
+
+def tenancy_scenario(quick: bool, verbose: bool) -> dict:
+    """(b) single-tenant vs two-tenant co-scheduling."""
+    plat = paper_platform(8)
+    horizon = 120.0 if quick else 240.0
+
+    nets = {}
+    for net in ("synthnet", "resnet50"):
+        layers = network_layers(net)
+        ev = DatabaseEvaluator(plat, layers)
+        sh = run_shisha(weights(layers), Trace(ev), "H3")
+        nets[net] = {
+            "layers": layers,
+            "ev": ev,
+            "conf": sh.result.best_conf,
+            "cap": sh.result.best_throughput,
+            "slo": 3.0 * sum(ev.stage_times(sh.result.best_conf)),
+        }
+
+    # each tenant asks for ~60% of *half* the platform's capacity, so the
+    # partitioned arms are loaded but feasible
+    tenants = [
+        Tenant(
+            name="synthnet",
+            layers=tuple(nets["synthnet"]["layers"]),
+            traffic=PoissonTraffic(rate=0.3 * nets["synthnet"]["cap"], seed=11),
+            slo=nets["synthnet"]["slo"],
+        ),
+        Tenant(
+            name="resnet50",
+            layers=tuple(nets["resnet50"]["layers"]),
+            traffic=MMPPTraffic(
+                rate_low=0.15 * nets["resnet50"]["cap"],
+                rate_high=0.45 * nets["resnet50"]["cap"],
+                seed=12,
+            ),
+            slo=nets["resnet50"]["slo"],
+        ),
+    ]
+
+    # single-tenant baseline: synthnet alone on the full platform
+    single = ServingSimulator(
+        nets["synthnet"]["ev"], nets["synthnet"]["conf"], slo=nets["synthnet"]["slo"]
+    ).run(tenants[0].traffic.arrivals(horizon), horizon)
+    _print_arm("tenancy/single", single, verbose)
+
+    strategies = ("interleaved",) if quick else ("interleaved", "blocked", "proportional")
+    per_strategy = {}
+    for strategy in strategies:
+        rows = co_schedule(plat, tenants, strategy=strategy, horizon=horizon)
+        per_strategy[strategy] = {
+            r.tenant.name: {
+                "eps": list(r.ep_idxs),
+                "conf": r.conf_pretty,
+                "model_throughput": r.model_throughput,
+                "n_trials": r.n_trials,
+                **_metrics(r.sim),
+            }
+            for r in rows
+        }
+        for r in rows:
+            _print_arm(f"tenancy/{strategy[:5]}/{r.tenant.name}", r.sim, verbose)
+
+    return {
+        "horizon_s": horizon,
+        "single_tenant": {"synthnet": _metrics(single)},
+        "two_tenant": per_strategy,
+    }
+
+
+def run(verbose: bool = True, quick: bool = False) -> dict:
+    payload = {
+        "drift": drift_scenario(quick, verbose),
+        "multitenant": tenancy_scenario(quick, verbose),
+    }
+    save("serve_sim", payload)
+    if not payload["drift"]["continuous_beats_static"]:
+        raise AssertionError("continuous Shisha failed to beat static under drift")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="shorter horizons, fewer strategies")
+    args = ap.parse_args()
+    run(verbose=True, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

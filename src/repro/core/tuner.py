@@ -60,6 +60,11 @@ def pick_target(
     Candidates: stages other than the slowest whose EP class is at least as
     fast as the slowest stage's and whose current beat is lower — preferring
     FEPs.  ``nfep``: minimal pipeline distance;  ``nlfep``: lightest load.
+
+    Ties are broken deterministically: ``nfep`` by (distance, beat, stage
+    index), ``nlfep`` by (beat, distance, stage index) — so equal-distance
+    equal-load candidates always resolve to the lowest stage index,
+    independent of candidate enumeration order.
     """
     fep_set = set(platform.feps)
     cands = [
@@ -72,9 +77,9 @@ def pick_target(
     fast_cands = [s for s in cands if conf.eps[s] in fep_set]
     pool = fast_cands or cands
     if balancing == "nfep":
-        return min(pool, key=lambda s: (abs(s - slowest), stage_times[s]))
+        return min(pool, key=lambda s: (abs(s - slowest), stage_times[s], s))
     if balancing == "nlfep":
-        return min(pool, key=lambda s: (stage_times[s], abs(s - slowest)))
+        return min(pool, key=lambda s: (stage_times[s], abs(s - slowest), s))
     raise ValueError(f"unknown balancing {balancing!r}")
 
 

@@ -1,0 +1,74 @@
+"""``repro.serve`` — discrete-event serving on top of Shisha scheduling.
+
+The paper's algorithms answer "which configuration is fastest at steady
+state"; this subsystem answers the production question layered on top:
+"what latency do users see under live, drifting traffic, and when is it
+worth paying Algorithm 2's online exploration cost again?".
+
+  * :mod:`.traffic`      — seeded arrival processes (Poisson, bursty MMPP,
+                           diurnal, replayable traces).
+  * :mod:`.simulator`    — event-driven pipeline server over the evaluator
+                           stage-time model: queues, micro-batching, tail
+                           latency, SLO accounting, EP occupancy.
+  * :mod:`.autotuner`    — continuous Shisha: drift detection and
+                           mid-flight re-tuning charged to the simulated
+                           clock.
+  * :mod:`.multitenant`  — disjoint EP partitioning for co-scheduling
+                           several pipelines on one platform.
+"""
+
+from .autotuner import (
+    ContinuousShisha,
+    Drift,
+    DriftDetector,
+    Retune,
+    drifted_platform,
+)
+from .multitenant import (
+    PARTITION_STRATEGIES,
+    Tenant,
+    TenantResult,
+    co_schedule,
+    compare_partitions,
+    partition_eps,
+    subplatform,
+)
+from .simulator import (
+    Request,
+    ServingSimulator,
+    SimResult,
+    percentile,
+    slo_violation_rate,
+)
+from .traffic import (
+    DiurnalTraffic,
+    MMPPTraffic,
+    PoissonTraffic,
+    ReplayTraffic,
+    TrafficGenerator,
+)
+
+__all__ = [
+    "ContinuousShisha",
+    "DiurnalTraffic",
+    "Drift",
+    "DriftDetector",
+    "MMPPTraffic",
+    "PARTITION_STRATEGIES",
+    "PoissonTraffic",
+    "ReplayTraffic",
+    "Request",
+    "Retune",
+    "ServingSimulator",
+    "SimResult",
+    "Tenant",
+    "TenantResult",
+    "TrafficGenerator",
+    "co_schedule",
+    "compare_partitions",
+    "drifted_platform",
+    "partition_eps",
+    "percentile",
+    "slo_violation_rate",
+    "subplatform",
+]

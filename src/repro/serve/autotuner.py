@@ -1,0 +1,254 @@
+"""Continuous Shisha: drift detection + mid-flight re-tuning.
+
+Static Shisha tunes once against a steady-state oracle and stops; this
+module closes the loop the paper's "online" framing implies.  A
+:class:`DriftDetector` watches the per-stage times a monitor observes and
+classifies three kinds of drift:
+
+  * ``dropout``    — an EP the configuration uses has died (the paper's
+                     elastic-rescale case, cf. ``runtime.fault.ElasticScheduler``);
+  * ``slowdown``   — a runtime derate (:class:`~repro.pipeline.hetero.EPDerates`)
+                     on an in-use EP crossed a threshold (straggler, cf.
+                     ``runtime.fault.StragglerMitigator``);
+  * ``imbalance``  — the bottleneck shifted: max/median observed stage time
+                     exceeds a threshold even without an attributable derate.
+
+A fourth kind, ``recovery``, is raised by :class:`ContinuousShisha` itself
+when the drift state *eases* (a derate shrinks or a dead EP revives): the
+detector only sees degradation, but recovered hardware is worth re-seeding
+for — the current schedule was tuned around it.
+
+On drift, :class:`ContinuousShisha` rebuilds its *model* platform (original
+EP specs scaled by the observed derates, dead EPs buried at the bottom of
+the H_e ranking so Algorithm 1 never picks them), re-runs ``core.tune`` —
+warm-starting from the current configuration for slowdowns exactly as the
+paper's online regime intends, re-seeding via Algorithm 1 when the current
+configuration references a dead EP — and returns a :class:`Retune` that
+charges the **full simulated exploration wall-clock** (``Trace.wall``:
+reconfiguration overhead plus ``measure_batches`` beats per trial) to the
+simulated clock: the old configuration keeps serving, degraded, until the
+exploration window elapses, then one reconfiguration ``downtime`` stalls
+admission while the new configuration is installed.  Cheap exploration
+(Shisha's whole point) translates directly into earlier recovery.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, FrozenSet, Sequence
+
+from ..core.config import PipelineConfig
+from ..core.cost_model import Layer, weights as layer_weights
+from ..core.evaluator import AnalyticEvaluator, Trace
+from ..core.platform import Platform
+from ..core.seed import generate_seed
+from ..core.tuner import Balancing, TuneResult, tune
+from ..pipeline.hetero import EPDerates
+
+#: perf_class used to bury dead EPs at the bottom of Platform.ranked()
+_DEAD_CLASS = 99
+
+
+def drifted_platform(platform: Platform, drift: EPDerates, dead: FrozenSet[int] | set = frozenset()) -> Platform:
+    """The scheduler's *model* of the drifted machine.
+
+    Slowed EPs get their compute and bandwidth divided by the drift factor
+    and, when slowed >1.25x, are demoted *below every healthy class* (not
+    just one step, which would merely tie them with the SEPs when all FEPs
+    throttle at once); dead EPs keep their index — so configurations stay
+    comparable — but rank last and near-zero, so Algorithm 1 seeds around
+    them.
+    """
+    worst_healthy = max(ep.perf_class for ep in platform.eps)
+    eps = []
+    for i, ep in enumerate(platform.eps):
+        f = drift.factors[i] if i < len(drift.factors) else 1.0
+        if i in dead:
+            eps.append(
+                dataclasses.replace(
+                    ep, flops_per_core=1e-9, mem_bw=1e-9, perf_class=_DEAD_CLASS
+                )
+            )
+        elif f > 1.0:
+            eps.append(
+                dataclasses.replace(
+                    ep,
+                    flops_per_core=ep.flops_per_core / f,
+                    mem_bw=ep.mem_bw / f,
+                    perf_class=worst_healthy + 1 if f > 1.25 else ep.perf_class,
+                )
+            )
+        else:
+            eps.append(ep)
+    return dataclasses.replace(platform, name=f"{platform.name}~drift", eps=tuple(eps))
+
+
+@dataclasses.dataclass
+class Drift:
+    kind: str  # "dropout" | "slowdown" | "imbalance"
+    detail: str
+
+
+@dataclasses.dataclass
+class DriftDetector:
+    """Classifies observed stage times + derates into a drift event.
+
+    Bottleneck shift is judged against *expected* stage times (the model's
+    prediction for the current configuration), not against the other
+    stages: a well-tuned heterogeneous pipeline is legitimately imbalanced
+    (a single heavy layer on its own EP), and only deviation from the
+    model indicates drift.
+    """
+
+    slowdown_threshold: float = 1.3
+    imbalance_threshold: float = 1.5
+
+    def detect(
+        self,
+        conf: PipelineConfig,
+        observed_times: Sequence[float],
+        drift: EPDerates,
+        dead: FrozenSet[int],
+        expected_times: Sequence[float] | None = None,
+    ) -> Drift | None:
+        dead_in_use = [ep for ep in conf.eps if ep in dead]
+        if dead_in_use:
+            return Drift("dropout", f"dead EPs in use: {dead_in_use}")
+        slowed = [
+            ep for ep in conf.eps if drift.factors[ep] > self.slowdown_threshold
+        ]
+        if slowed:
+            return Drift("slowdown", f"derated EPs in use: {slowed}")
+        if expected_times is not None and len(expected_times) == len(observed_times):
+            worst, stage = 1.0, None
+            for s, (obs, exp) in enumerate(zip(observed_times, expected_times)):
+                if math.isfinite(obs) and exp > 0 and obs / exp > worst:
+                    worst, stage = obs / exp, s
+            if worst > self.imbalance_threshold:
+                return Drift("imbalance", f"stage {stage} at {worst:.2f}x its model time")
+        return None
+
+
+@dataclasses.dataclass
+class Retune:
+    """Decision handed to the simulator: new conf + its simulated-time cost.
+
+    ``tuning_cost`` is Algorithm 2's exploration wall-clock (``Trace.wall``);
+    during that window the pipeline keeps serving on the *old* configuration
+    — the paper's measurement batches are real traffic — and only the final
+    ``downtime`` (weights shipped to their new EPs) stalls admission.
+    """
+
+    conf: PipelineConfig
+    #: seconds of exploration during which the old conf keeps serving
+    tuning_cost: float
+    #: seconds of full stall while the new conf is installed
+    downtime: float
+    kind: str
+    model_throughput: float
+    tune_result: TuneResult
+
+    @property
+    def cost(self) -> float:
+        return self.tuning_cost + self.downtime
+
+
+@dataclasses.dataclass
+class ContinuousShisha:
+    """The ``observe()`` hook a :class:`~repro.serve.simulator.ServingSimulator` polls.
+
+    Re-tunes at most once per distinct drift state (fingerprinted by the
+    derate vector + dead set) and not more often than ``cooldown`` simulated
+    seconds, so a persistent derate does not trigger a re-tune storm.
+    """
+
+    platform: Platform
+    layers: Sequence[Layer]
+    #: model-evaluator factory for the tuner's Trace (e.g. DatabaseEvaluator)
+    make_evaluator: Callable[[Platform], AnalyticEvaluator] | None = None
+    detector: DriftDetector = dataclasses.field(default_factory=DriftDetector)
+    alpha: int = 10
+    balancing: Balancing = "nlfep"
+    #: charged once on top of Trace.wall when the new conf is installed
+    reconfig_downtime: float = 0.05
+    #: minimum simulated seconds between re-tunes
+    cooldown: float = 1.0
+    measure_batches: int = 8
+    reconfig_overhead: float = 0.05
+
+    def __post_init__(self):
+        if self.make_evaluator is None:
+            self.make_evaluator = lambda p: AnalyticEvaluator(p, self.layers)
+        self._last_t = -math.inf
+        # start from the no-drift state so the intrinsic imbalance of a
+        # freshly tuned heterogeneous pipeline never triggers a re-tune
+        self._handled: tuple = ((1.0,) * self.platform.n_eps, frozenset())
+        self._model_ev = self.make_evaluator(self.platform)
+        self.history: list[Retune] = []
+
+    def observe(
+        self,
+        t: float,
+        conf: PipelineConfig,
+        observed_times: Sequence[float],
+        drift: EPDerates,
+        dead: FrozenSet[int],
+    ) -> Retune | None:
+        fingerprint = (drift.factors, frozenset(dead))
+        if fingerprint == self._handled:
+            return None
+        expected = self._model_ev.stage_times(conf)
+        event = self.detector.detect(conf, observed_times, drift, dead, expected)
+        if event is None:
+            # the detector only sees degradation; an *easing* fingerprint
+            # (derate shrank, dead EP revived) is a chance to reclaim
+            # hardware the current schedule tuned around
+            prev_factors, prev_dead = self._handled
+            eased = any(
+                f < pf - 1e-9 for f, pf in zip(drift.factors, prev_factors)
+            )
+            revived = bool(set(prev_dead) - set(dead))
+            if eased or revived:
+                event = Drift("recovery", "platform sped up; re-seeding to reclaim it")
+        if event is None:
+            # benign drift (e.g. an unused EP derated): remember and move on
+            self._handled = fingerprint
+            return None
+        if t - self._last_t < self.cooldown:
+            return None
+        model = drifted_platform(self.platform, drift, dead)
+        trace = Trace(
+            self.make_evaluator(model),
+            measure_batches=self.measure_batches,
+            reconfig_overhead=self.reconfig_overhead,
+        )
+        if event.kind in ("dropout", "recovery"):
+            # re-seed via Algorithm 1: a warm start cannot drop a dead EP's
+            # stage by itself, nor grow stages onto recovered hardware
+            n_alive = model.n_eps - len(dead)
+            if n_alive < 1:
+                raise RuntimeError("all EPs dead; nothing to schedule onto")
+            seed = generate_seed(
+                layer_weights(self.layers),
+                model,
+                n_stages=min(n_alive, len(self.layers)),
+                choice="rank_w",
+            )
+            result = tune(seed, trace, alpha=self.alpha, balancing=self.balancing)
+        else:
+            # warm start from the serving configuration (paper's online mode)
+            result = tune(conf, trace, alpha=self.alpha, balancing=self.balancing)
+        self._last_t = t
+        self._handled = fingerprint
+        self._model_ev = trace.evaluator  # new model baseline for drift checks
+        retune = Retune(
+            conf=result.best_conf,
+            tuning_cost=trace.wall,
+            downtime=self.reconfig_downtime,
+            kind=event.kind,
+            model_throughput=result.best_throughput,
+            tune_result=result,
+        )
+        self.history.append(retune)
+        return retune

@@ -1,0 +1,159 @@
+"""Multi-tenant co-scheduling: several CNN pipelines on one platform.
+
+The paper schedules one network onto one chiplet platform; a serving
+deployment runs many.  Because Shisha's EP assignment is injective (each
+stage owns its EP), the natural multi-tenant form is a *disjoint partition*
+of the platform's EPs: each tenant receives a sub-platform, is seeded and
+tuned independently (Algorithms 1+2 unchanged), and is simulated under its
+own traffic.  Disjointness makes the per-tenant simulations exact — there
+is no cross-tenant interference channel other than the partition choice
+itself, which is precisely the knob this module compares.
+
+Partition strategies over the H_e ranking (``Platform.ranked()``):
+
+  * ``interleaved``   — deal ranked EPs round-robin, so every tenant gets a
+                        fair FEP/SEP mix (heterogeneity-preserving).
+  * ``blocked``       — contiguous chunks of the ranking: tenant 0 gets the
+                        fastest block (priority tiers).
+  * ``proportional``  — deal each ranked EP to the tenant with the largest
+                        unmet ``share`` (weighted fairness).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from ..core.cost_model import Layer, weights as layer_weights
+from ..core.evaluator import AnalyticEvaluator, DatabaseEvaluator, Trace
+from ..core.heuristics import run_shisha
+from ..core.platform import Platform
+from .simulator import ServingSimulator, SimResult
+from .traffic import TrafficGenerator
+
+PARTITION_STRATEGIES = ("interleaved", "blocked", "proportional")
+
+
+@dataclasses.dataclass(frozen=True)
+class Tenant:
+    """One hosted pipeline: a network, its traffic, and its SLO."""
+
+    name: str
+    layers: tuple[Layer, ...]
+    traffic: TrafficGenerator
+    #: latency SLO in simulated seconds
+    slo: float = 1.0
+    #: relative EP share under the "proportional" strategy
+    share: float = 1.0
+
+
+def partition_eps(
+    platform: Platform,
+    n_parts: int,
+    strategy: str = "interleaved",
+    shares: Sequence[float] | None = None,
+) -> list[tuple[int, ...]]:
+    """Split the platform's EP indices into ``n_parts`` disjoint groups."""
+    if n_parts < 1 or n_parts > platform.n_eps:
+        raise ValueError(f"cannot split {platform.n_eps} EPs into {n_parts} parts")
+    ranked = platform.ranked()
+    shares = list(shares) if shares is not None else [1.0] * n_parts
+    if len(shares) != n_parts or any(s <= 0 for s in shares):
+        raise ValueError(f"need {n_parts} positive shares, got {shares}")
+    parts: list[list[int]] = [[] for _ in range(n_parts)]
+    if strategy == "interleaved":
+        for i, ep in enumerate(ranked):
+            parts[i % n_parts].append(ep)
+    elif strategy == "blocked":
+        total = sum(shares)
+        sizes = [max(1, round(platform.n_eps * s / total)) for s in shares]
+        while sum(sizes) > platform.n_eps:
+            sizes[sizes.index(max(sizes))] -= 1
+        while sum(sizes) < platform.n_eps:
+            sizes[sizes.index(min(sizes))] += 1
+        start = 0
+        for p, size in enumerate(sizes):
+            parts[p] = ranked[start : start + size]
+            start += size
+    elif strategy == "proportional":
+        got = [0.0] * n_parts
+        for ep in ranked:
+            # largest unmet share takes the next-fastest EP (ties: lower idx)
+            p = max(range(n_parts), key=lambda i: (shares[i] - got[i], -i))
+            parts[p].append(ep)
+            got[p] += 1.0 * sum(shares) / platform.n_eps
+    else:
+        raise ValueError(f"unknown strategy {strategy!r}; have {PARTITION_STRATEGIES}")
+    if any(not p for p in parts):
+        raise ValueError(f"strategy {strategy!r} left a tenant with no EPs: {parts}")
+    return [tuple(p) for p in parts]
+
+
+def subplatform(platform: Platform, ep_idxs: Sequence[int], name: str) -> Platform:
+    """A tenant's private view: the selected EPs, reindexed from 0."""
+    return Platform(name=name, eps=tuple(platform.eps[i] for i in ep_idxs))
+
+
+@dataclasses.dataclass
+class TenantResult:
+    tenant: Tenant
+    ep_idxs: tuple[int, ...]  # global EP indices owned by this tenant
+    conf_pretty: str
+    model_throughput: float
+    n_trials: int
+    sim: SimResult
+
+
+def co_schedule(
+    platform: Platform,
+    tenants: Sequence[Tenant],
+    *,
+    strategy: str = "interleaved",
+    horizon: float = 30.0,
+    make_evaluator: Callable[[Platform, Sequence[Layer]], AnalyticEvaluator] | None = None,
+    heuristic: str = "H3",
+    max_batch: int = 4,
+    batch_efficiency: float = 0.7,
+) -> list[TenantResult]:
+    """Partition, tune each tenant with Shisha, and simulate its traffic."""
+    if make_evaluator is None:
+        make_evaluator = lambda p, layers: DatabaseEvaluator(p, layers)
+    parts = partition_eps(
+        platform, len(tenants), strategy, shares=[t.share for t in tenants]
+    )
+    results: list[TenantResult] = []
+    for idx, (tenant, ep_idxs) in enumerate(zip(tenants, parts)):
+        sub = subplatform(platform, ep_idxs, f"{platform.name}/{tenant.name}")
+        ev = make_evaluator(sub, tenant.layers)
+        trace = Trace(ev)
+        sh = run_shisha(layer_weights(tenant.layers), trace, heuristic)
+        conf = sh.result.best_conf
+        sim = ServingSimulator(
+            ev,
+            conf,
+            slo=tenant.slo,
+            max_batch=max_batch,
+            batch_efficiency=batch_efficiency,
+        )
+        res = sim.run(tenant.traffic.arrivals(horizon), horizon, tenant=idx)
+        results.append(
+            TenantResult(
+                tenant=tenant,
+                ep_idxs=ep_idxs,
+                conf_pretty=conf.pretty([ep.name for ep in sub.eps]),
+                model_throughput=sh.result.best_throughput,
+                n_trials=trace.n_trials,
+                sim=res,
+            )
+        )
+    return results
+
+
+def compare_partitions(
+    platform: Platform,
+    tenants: Sequence[Tenant],
+    strategies: Sequence[str] = PARTITION_STRATEGIES,
+    **kwargs,
+) -> dict[str, list[TenantResult]]:
+    """Run ``co_schedule`` under each partition strategy (same traffic)."""
+    return {s: co_schedule(platform, tenants, strategy=s, **kwargs) for s in strategies}

@@ -1,0 +1,371 @@
+"""Discrete-event serving simulator for Shisha-scheduled pipelines.
+
+The simulator drives a pipeline *configuration* (``PipelineConfig`` mapped
+onto a ``Platform``) under live traffic and measures what the steady-state
+oracle cannot: queueing delay, tail latency, SLO violations and the cost of
+re-tuning while requests are in flight.
+
+Model (paper terms in parentheses):
+
+  * Each stage is a FIFO queue in front of its EP (chiplet).  Serving one
+    request through a stage takes the evaluator's ``stage_times(conf)[s]``
+    (the stage's share of the pipeline *beat*), optionally scaled by a
+    runtime drift factor per EP (:class:`~repro.pipeline.hetero.EPDerates`
+    — thermal throttling, sick host, shared-link neighbour).
+  * Micro-batching: a stage may serve up to ``max_batch`` queued requests
+    in one go; a batch of ``b`` takes ``t_stage * (1 + (b-1) *
+    batch_efficiency)`` — ``batch_efficiency=1`` is pure serialisation,
+    smaller values model amortised weight-streaming exactly like larger
+    measure batches amortise reconfiguration in ``Trace``.
+  * Faults are scripted on the simulated clock: ``schedule_slowdown`` (EP
+    derate, the Fig. 9-style heterogeneity drift) and ``schedule_dropout``
+    (EP death — its stage blocks and queues grow until a re-tune).
+  * Re-tuning (continuous Shisha, ``autotuner.py``) is observed through
+    periodic monitor events.  When the autotuner decides to re-tune, the
+    simulator *charges the full exploration wall-clock of Algorithm 2*
+    (``Trace.wall`` — reconfiguration overhead plus ``measure_batches``
+    beats per trial) to the simulated clock: the old configuration keeps
+    serving (degraded) for that window, because the paper's measurement
+    batches are real traffic, then the new configuration is installed
+    under a short admission stall during which in-flight work is cancelled
+    and mid-pipeline requests restart from stage 0 (drain-and-restart).
+    This is exactly the online-cost regime Shisha is designed for — an
+    expensive explorer would serve degraded for far longer before
+    recovering.
+
+Determinism: the simulator owns no randomness at all; all stochasticity
+lives in the seeded ``traffic`` generators, so a (traffic, scenario) pair
+replays bit-identically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from collections import deque
+from typing import Callable, Sequence
+
+from ..core.config import PipelineConfig
+from ..core.evaluator import AnalyticEvaluator
+from ..pipeline.hetero import EPDerates
+
+# event kinds, in tie-break priority order at equal timestamps
+_ARRIVAL, _DONE, _PLATFORM, _MONITOR, _RECONFIG = range(5)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    t_arrival: float
+    tenant: int = 0
+    t_start: float = math.nan  # first time any stage began serving it
+    t_done: float = math.nan
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_arrival
+
+
+@dataclasses.dataclass
+class _Stage:
+    queue: deque
+    busy: bool = False
+    token: int = 0  # bumped to invalidate in-flight completions (cancel)
+    batch: list | None = None
+    service_dt: float = 0.0
+
+
+def percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Deterministic nearest-rank percentile (q in [0,1])."""
+    if not sorted_vals:
+        return math.nan
+    idx = max(0, math.ceil(q * len(sorted_vals)) - 1)
+    return sorted_vals[idx]
+
+
+def slo_violation_rate(latencies: Sequence[float], slo: float) -> float:
+    """Fraction of completed requests whose latency exceeds ``slo``."""
+    if not latencies:
+        return 0.0
+    return sum(1 for l in latencies if l > slo) / len(latencies)
+
+
+@dataclasses.dataclass
+class SimResult:
+    horizon: float
+    slo: float
+    n_arrived: int
+    n_completed: int
+    n_in_flight: int
+    n_queued: int
+    latencies: list[float]
+    throughput_rps: float
+    p50: float
+    p95: float
+    p99: float
+    #: p95 of time from arrival to first service start (pure queueing delay)
+    p95_wait: float
+    #: completed-late requests PLUS requests still in the system at the
+    #: horizon that have already outlived the SLO — censoring the backlog
+    #: would flatter an arm that stalls and completes nothing
+    n_slo_violations: int
+    #: n_slo_violations / n_arrived
+    slo_rate: float
+    #: EP name -> fraction of the horizon the EP spent serving
+    occupancy: dict[str, float]
+    #: one entry per re-tune: {t, kind, cost_s, new_depth, model_throughput}
+    reconfigs: list[dict]
+    #: (t, queued + in-flight) sampled at every monitor tick
+    load_samples: list[tuple[float, int]]
+
+    def summary(self) -> str:
+        return (
+            f"arrived={self.n_arrived} done={self.n_completed} "
+            f"tp={self.throughput_rps:.1f}/s p50={self.p50 * 1e3:.0f}ms "
+            f"p95={self.p95 * 1e3:.0f}ms p99={self.p99 * 1e3:.0f}ms "
+            f"slo_viol={self.slo_rate * 100:.1f}% reconfigs={len(self.reconfigs)}"
+        )
+
+
+class ServingSimulator:
+    """Event-driven pipeline server over an evaluator's stage-time model.
+
+    ``evaluator`` is the ground truth (the "hardware"): stage times come
+    from it and are scaled by the runtime drift factors the fault scenario
+    injects.  The autotuner never sees the ground truth directly — only
+    the observed per-stage times at monitor ticks, mirroring the paper's
+    online measure-then-move loop.
+    """
+
+    def __init__(
+        self,
+        evaluator: AnalyticEvaluator,
+        conf: PipelineConfig,
+        *,
+        max_batch: int = 4,
+        batch_efficiency: float = 0.7,
+        slo: float = 1.0,
+        monitor_interval: float = 0.5,
+        autotuner=None,
+    ):
+        self.evaluator = evaluator
+        self.conf = conf
+        self.max_batch = max(1, max_batch)
+        self.batch_efficiency = batch_efficiency
+        self.slo = slo
+        self.monitor_interval = monitor_interval
+        self.autotuner = autotuner
+
+        n_eps = evaluator.platform.n_eps
+        self.drift = EPDerates(factors=(1.0,) * n_eps)
+        self.dead: set[int] = set()
+        self._base_times = list(evaluator.stage_times(conf))
+        self._stages = [_Stage(queue=deque()) for _ in range(conf.depth)]
+        self._heap: list = []
+        self._seq = 0
+        self._stall_until = -math.inf
+        self._retuning_until = -math.inf
+        self._epoch = 0  # bumped per reconfig; invalidates pre-reconfig _DONEs
+        self._busy_time = [0.0] * n_eps
+        self._completed: list[Request] = []
+        self._n_arrived = 0
+        self._reconfigs: list[dict] = []
+        self._load_samples: list[tuple[float, int]] = []
+        self._scripted: list[tuple[float, Callable]] = []
+
+    # -- scenario scripting -------------------------------------------------
+
+    def schedule_slowdown(self, t: float, ep_idx: int, factor: float) -> None:
+        """At time ``t`` the EP becomes ``factor``x slower (drift derate)."""
+
+        def apply(sim: "ServingSimulator", now: float) -> None:
+            f = list(sim.drift.factors)
+            f[ep_idx] = f[ep_idx] * factor
+            sim.drift = EPDerates(factors=tuple(f))
+
+        self._scripted.append((t, apply))
+
+    def schedule_dropout(self, t: float, ep_idx: int) -> None:
+        """At time ``t`` the EP dies: its stage blocks, in-flight work is lost."""
+
+        def apply(sim: "ServingSimulator", now: float) -> None:
+            sim.dead.add(ep_idx)
+            for s, st in enumerate(sim._stages):
+                if sim.conf.eps[s] == ep_idx and st.busy:
+                    st.token += 1  # cancel the in-flight completion
+                    st.busy = False
+                    st.queue.extendleft(reversed(st.batch or []))
+                    st.batch = None
+
+        self._scripted.append((t, apply))
+
+    def schedule_revival(self, t: float, ep_idx: int) -> None:
+        """At time ``t`` a dead EP comes back; its stages may serve again."""
+
+        def apply(sim: "ServingSimulator", now: float) -> None:
+            sim.dead.discard(ep_idx)
+            for s in range(sim.conf.depth):
+                if sim.conf.eps[s] == ep_idx:
+                    sim._try_start(s, now)
+
+        self._scripted.append((t, apply))
+
+    # -- internals ----------------------------------------------------------
+
+    def _push(self, t: float, kind: int, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, kind, self._seq, payload))
+
+    def _effective_time(self, stage: int) -> float:
+        return self.drift.scale(self.conf.eps[stage], self._base_times[stage])
+
+    def observed_stage_times(self) -> list[float]:
+        """What a monitor sees: drifted stage times, inf for dead EPs."""
+        return [
+            math.inf if self.conf.eps[s] in self.dead else self._effective_time(s)
+            for s in range(self.conf.depth)
+        ]
+
+    def _try_start(self, stage: int, t: float) -> None:
+        st = self._stages[stage]
+        ep = self.conf.eps[stage]
+        if st.busy or not st.queue or t < self._stall_until or ep in self.dead:
+            return
+        b = min(len(st.queue), self.max_batch)
+        batch = [st.queue.popleft() for _ in range(b)]
+        dt = self._effective_time(stage) * (1.0 + (b - 1) * self.batch_efficiency)
+        for r in batch:
+            if math.isnan(r.t_start):
+                r.t_start = t
+        st.busy, st.batch, st.service_dt = True, batch, dt
+        self._push(t + dt, _DONE, (stage, st.token, self._epoch))
+
+    def _on_done(self, t: float, stage: int, token: int, epoch: int) -> None:
+        if epoch != self._epoch:
+            return  # batch belonged to a configuration that was replaced
+        st = self._stages[stage]
+        if token != st.token:
+            return  # cancelled (dropout)
+        st.busy = False
+        self._busy_time[self.conf.eps[stage]] += st.service_dt
+        batch, st.batch = st.batch or [], None
+        if stage == self.conf.depth - 1:
+            for r in batch:
+                r.t_done = t
+                self._completed.append(r)
+        else:
+            self._stages[stage + 1].queue.extend(batch)
+            self._try_start(stage + 1, t)
+        self._try_start(stage, t)
+
+    def _begin_reconfig(self, t: float, retune) -> None:
+        # The old configuration keeps serving during the exploration window
+        # (measurement batches are real traffic); the new conf lands at its
+        # end and only then does the install downtime stall admission.
+        self._retuning_until = t + retune.tuning_cost
+        entry = {
+            "t": t,
+            "kind": retune.kind,
+            "tuning_cost_s": retune.tuning_cost,
+            "downtime_s": retune.downtime,
+            "new_depth": retune.conf.depth,
+            "model_throughput": retune.model_throughput,
+        }
+        self._push(self._retuning_until, _RECONFIG, (retune, entry))
+
+    def _apply_reconfig(self, t: float, retune, entry: dict) -> None:
+        # logged here, not at decision time: a re-tune whose exploration
+        # window runs past the horizon never installs and is not reported
+        self._reconfigs.append(entry)
+        # Drain-and-restart: cancel in-flight work, restart mid-pipeline
+        # requests from stage 0 of the new configuration.
+        displaced: list[Request] = []
+        for st in self._stages:
+            if st.busy:
+                displaced.extend(st.batch or [])
+            displaced.extend(st.queue)
+        displaced.sort(key=lambda r: (r.t_arrival, r.rid))
+        self._epoch += 1  # outstanding _DONE events of the old conf are void
+        self.conf = retune.conf
+        self._base_times = list(self.evaluator.stage_times(self.conf))
+        self._stages = [_Stage(queue=deque()) for _ in range(self.conf.depth)]
+        self._stages[0].queue.extend(displaced)
+        self._stall_until = t + retune.downtime
+        self._push(self._stall_until, _PLATFORM, lambda sim, now: sim._try_start(0, now))
+
+    def _on_monitor(self, t: float, horizon: float) -> None:
+        in_system = sum(len(st.queue) for st in self._stages) + sum(
+            len(st.batch or []) for st in self._stages if st.busy
+        )
+        self._load_samples.append((t, in_system))
+        if self.autotuner is not None and t >= self._stall_until and t >= self._retuning_until:
+            retune = self.autotuner.observe(
+                t, self.conf, self.observed_stage_times(), self.drift, frozenset(self.dead)
+            )
+            if retune is not None:
+                self._begin_reconfig(t, retune)
+        nxt = t + self.monitor_interval
+        if nxt < horizon:
+            self._push(nxt, _MONITOR, horizon)
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, arrival_times: Sequence[float], horizon: float, tenant: int = 0) -> SimResult:
+        for rid, ta in enumerate(arrival_times):
+            self._push(ta, _ARRIVAL, Request(rid=rid, t_arrival=ta, tenant=tenant))
+        for t, fn in self._scripted:
+            self._push(t, _PLATFORM, fn)
+        if self.monitor_interval < horizon:
+            self._push(self.monitor_interval, _MONITOR, horizon)
+
+        while self._heap:
+            t, kind, _seq, payload = heapq.heappop(self._heap)
+            if t > horizon:
+                break
+            if kind == _ARRIVAL:
+                self._n_arrived += 1
+                self._stages[0].queue.append(payload)
+                self._try_start(0, t)
+            elif kind == _DONE:
+                self._on_done(t, *payload)
+            elif kind == _PLATFORM:
+                payload(self, t)
+            elif kind == _MONITOR:
+                self._on_monitor(t, payload)
+            elif kind == _RECONFIG:
+                self._apply_reconfig(t, *payload)
+        return self._result(horizon)
+
+    def _result(self, horizon: float) -> SimResult:
+        lats = sorted(r.latency for r in self._completed)
+        n_in_flight = sum(len(st.batch or []) for st in self._stages if st.busy)
+        n_queued = sum(len(st.queue) for st in self._stages)
+        pending = [
+            r
+            for st in self._stages
+            for r in list(st.queue) + ((st.batch or []) if st.busy else [])
+        ]
+        n_viol = sum(1 for l in lats if l > self.slo) + sum(
+            1 for r in pending if horizon - r.t_arrival > self.slo
+        )
+        eps = self.evaluator.platform.eps
+        return SimResult(
+            horizon=horizon,
+            slo=self.slo,
+            n_arrived=self._n_arrived,
+            n_completed=len(self._completed),
+            n_in_flight=n_in_flight,
+            n_queued=n_queued,
+            latencies=lats,
+            throughput_rps=len(self._completed) / horizon if horizon > 0 else 0.0,
+            p50=percentile(lats, 0.50),
+            p95=percentile(lats, 0.95),
+            p99=percentile(lats, 0.99),
+            p95_wait=percentile(sorted(r.t_start - r.t_arrival for r in self._completed), 0.95),
+            n_slo_violations=n_viol,
+            slo_rate=n_viol / self._n_arrived if self._n_arrived else 0.0,
+            occupancy={ep.name: self._busy_time[i] / horizon for i, ep in enumerate(eps)},
+            reconfigs=self._reconfigs,
+            load_samples=self._load_samples,
+        )

@@ -1,0 +1,161 @@
+"""Arrival-process generators for the serving simulator.
+
+Every generator is a deterministic function of its seed: calling
+``arrivals(horizon)`` twice returns the identical timestamp list, and a
+recorded trace replays bit-identically (:class:`ReplayTraffic`).  This is
+what makes simulator results reproducible across the static-vs-continuous
+Shisha comparisons in ``benchmarks/serve_sim.py`` — both arms see the very
+same request stream.
+
+Time is *simulated* seconds on the same axis the :class:`~repro.core.evaluator.Trace`
+cost accounting uses (a pipeline "beat" = the slowest stage time), so an
+arrival rate is directly comparable to the evaluator's steady-state
+throughput ``1 / beat``.
+
+Processes:
+
+  * :class:`PoissonTraffic`   — memoryless baseline (open-loop load).
+  * :class:`MMPPTraffic`      — 2-state Markov-modulated Poisson process,
+    the standard bursty-traffic model (calm/burst states with exponential
+    sojourns).
+  * :class:`DiurnalTraffic`   — inhomogeneous Poisson with a sinusoidal
+    rate profile (a compressed day/night cycle), sampled by thinning.
+  * :class:`ReplayTraffic`    — replays an explicit timestamp list; use
+    :meth:`ReplayTraffic.record` to freeze any generator into a trace.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+from pathlib import Path
+from typing import Protocol
+
+import numpy as np
+
+
+class TrafficGenerator(Protocol):
+    """Anything that can produce a sorted list of arrival times."""
+
+    def arrivals(self, horizon: float) -> list[float]: ...
+
+
+def _rng(seed: int) -> np.random.Generator:
+    return np.random.Generator(np.random.PCG64(seed))
+
+
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PoissonTraffic:
+    """Homogeneous Poisson arrivals at ``rate`` requests/second."""
+
+    rate: float
+    seed: int = 0
+
+    def arrivals(self, horizon: float) -> list[float]:
+        if self.rate <= 0:
+            return []
+        rng = _rng(self.seed)
+        out: list[float] = []
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / self.rate)
+            if t >= horizon:
+                return out
+            out.append(t)
+
+
+@dataclasses.dataclass(frozen=True)
+class MMPPTraffic:
+    """2-state Markov-modulated Poisson process (bursty traffic).
+
+    The process alternates between a *calm* state (``rate_low``) and a
+    *burst* state (``rate_high``); sojourn times in each state are
+    exponential with means ``mean_calm`` / ``mean_burst`` seconds.
+    """
+
+    rate_low: float
+    rate_high: float
+    mean_calm: float = 5.0
+    mean_burst: float = 1.0
+    seed: int = 0
+
+    def arrivals(self, horizon: float) -> list[float]:
+        rng = _rng(self.seed)
+        out: list[float] = []
+        t = 0.0
+        burst = False
+        state_end = rng.exponential(self.mean_calm)
+        while t < horizon:
+            rate = self.rate_high if burst else self.rate_low
+            dt = rng.exponential(1.0 / rate) if rate > 0 else math.inf
+            if t + dt < state_end:
+                t += dt
+                if t < horizon:
+                    out.append(t)
+            else:
+                t = state_end
+                burst = not burst
+                state_end = t + rng.exponential(self.mean_burst if burst else self.mean_calm)
+        return out
+
+
+@dataclasses.dataclass(frozen=True)
+class DiurnalTraffic:
+    """Inhomogeneous Poisson with a sinusoidal day/night rate profile.
+
+    ``lambda(t) = base_rate + (peak_rate - base_rate) * (1 - cos(2*pi*t/period)) / 2``
+    starts at the ``base_rate`` trough, peaks at ``period/2``.  Sampled by
+    thinning against the ``peak_rate`` envelope (Lewis & Shedler), so the
+    output is exact for the profile, not a stepwise approximation.
+    """
+
+    base_rate: float
+    peak_rate: float
+    period: float = 60.0
+    seed: int = 0
+
+    def rate_at(self, t: float) -> float:
+        swing = (1.0 - math.cos(2.0 * math.pi * t / self.period)) / 2.0
+        return self.base_rate + (self.peak_rate - self.base_rate) * swing
+
+    def arrivals(self, horizon: float) -> list[float]:
+        lam_max = max(self.peak_rate, self.base_rate)
+        if lam_max <= 0:
+            return []
+        rng = _rng(self.seed)
+        out: list[float] = []
+        t = 0.0
+        while True:
+            t += rng.exponential(1.0 / lam_max)
+            if t >= horizon:
+                return out
+            if rng.uniform() * lam_max <= self.rate_at(t):
+                out.append(t)
+
+
+@dataclasses.dataclass(frozen=True)
+class ReplayTraffic:
+    """Replays an explicit, frozen timestamp trace."""
+
+    times: tuple[float, ...]
+
+    @classmethod
+    def record(cls, gen: TrafficGenerator, horizon: float) -> "ReplayTraffic":
+        """Freeze any generator's output into a replayable trace."""
+        return cls(times=tuple(gen.arrivals(horizon)))
+
+    def arrivals(self, horizon: float) -> list[float]:
+        return [t for t in self.times if t < horizon]
+
+    def save(self, path: str | Path) -> Path:
+        p = Path(path)
+        p.write_text(json.dumps(list(self.times)))
+        return p
+
+    @classmethod
+    def load(cls, path: str | Path) -> "ReplayTraffic":
+        return cls(times=tuple(json.loads(Path(path).read_text())))

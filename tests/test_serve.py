@@ -1,0 +1,327 @@
+"""Tests for the repro.serve subsystem (traffic, simulator, autotuner, tenancy)."""
+
+import math
+
+import pytest
+
+from repro.core import DatabaseEvaluator, Trace, paper_platform, weights
+from repro.core.heuristics import run_shisha
+from repro.models.cnn import network_layers
+from repro.serve import (
+    ContinuousShisha,
+    DiurnalTraffic,
+    MMPPTraffic,
+    PoissonTraffic,
+    ReplayTraffic,
+    ServingSimulator,
+    drifted_platform,
+    partition_eps,
+    percentile,
+    slo_violation_rate,
+    subplatform,
+)
+from repro.pipeline.hetero import EPDerates
+
+# ---------------------------------------------------------------------------
+# shared fixture: tuned synthnet pipeline on the paper's 8-EP platform
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    ev = DatabaseEvaluator(plat, layers)
+    sh = run_shisha(weights(layers), Trace(ev), "H3")
+    return {
+        "layers": layers,
+        "plat": plat,
+        "ev": ev,
+        "conf": sh.result.best_conf,
+        "cap": sh.result.best_throughput,
+    }
+
+
+def _slo(t):
+    return 3.0 * sum(t["ev"].stage_times(t["conf"]))
+
+
+# ---------------------------------------------------------------------------
+# traffic: seeded determinism
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "gen",
+    [
+        PoissonTraffic(rate=5.0, seed=3),
+        MMPPTraffic(rate_low=2.0, rate_high=20.0, seed=3),
+        DiurnalTraffic(base_rate=1.0, peak_rate=10.0, period=30.0, seed=3),
+    ],
+    ids=["poisson", "mmpp", "diurnal"],
+)
+def test_traffic_deterministic_and_sorted(gen):
+    a = gen.arrivals(60.0)
+    b = gen.arrivals(60.0)
+    assert a == b  # same seed => bit-identical
+    assert a == sorted(a)
+    assert all(0.0 <= t < 60.0 for t in a)
+    assert len(a) > 10
+
+
+def test_traffic_seed_matters():
+    a = PoissonTraffic(rate=5.0, seed=0).arrivals(60.0)
+    b = PoissonTraffic(rate=5.0, seed=1).arrivals(60.0)
+    assert a != b
+
+
+def test_replay_roundtrip(tmp_path):
+    gen = MMPPTraffic(rate_low=2.0, rate_high=20.0, seed=9)
+    rec = ReplayTraffic.record(gen, 30.0)
+    assert rec.arrivals(30.0) == gen.arrivals(30.0)
+    assert rec.arrivals(10.0) == [t for t in gen.arrivals(30.0) if t < 10.0]
+    p = rec.save(tmp_path / "trace.json")
+    assert ReplayTraffic.load(p).arrivals(30.0) == rec.arrivals(30.0)
+
+
+# ---------------------------------------------------------------------------
+# simulator: conservation, SLO accounting, determinism
+# ---------------------------------------------------------------------------
+
+
+def test_queue_conservation_under_overload(tuned):
+    # 2x overload so the run ends with requests queued and in flight
+    traffic = PoissonTraffic(rate=2.0 * tuned["cap"], seed=5)
+    sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned))
+    res = sim.run(traffic.arrivals(30.0), 30.0)
+    assert res.n_arrived == len(traffic.arrivals(30.0))
+    assert res.n_arrived == res.n_completed + res.n_in_flight + res.n_queued
+    assert res.n_queued > 0  # overload actually built a backlog
+
+
+def test_simulator_is_deterministic(tuned):
+    traffic = PoissonTraffic(rate=0.5 * tuned["cap"], seed=5)
+    runs = []
+    for _ in range(2):
+        sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned))
+        runs.append(sim.run(traffic.arrivals(60.0), 60.0))
+    assert runs[0].latencies == runs[1].latencies
+    assert runs[0].occupancy == runs[1].occupancy
+
+
+def test_underload_completes_with_zero_violations(tuned):
+    traffic = PoissonTraffic(rate=0.4 * tuned["cap"], seed=5)
+    sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned))
+    res = sim.run(traffic.arrivals(60.0), 60.0)
+    assert res.n_completed >= 0.9 * res.n_arrived
+    assert res.slo_rate == 0.0
+    assert all(0.0 <= v <= 1.0 for v in res.occupancy.values())
+
+
+def test_slo_accounting_monotone_in_threshold(tuned):
+    traffic = PoissonTraffic(rate=0.9 * tuned["cap"], seed=5)
+    lats = None
+    rates = []
+    for slo_mult in (4.0, 2.0, 1.0, 0.5):
+        sim = ServingSimulator(
+            tuned["ev"], tuned["conf"], slo=slo_mult * sum(tuned["ev"].stage_times(tuned["conf"]))
+        )
+        res = sim.run(traffic.arrivals(40.0), 40.0)
+        if lats is None:
+            lats = res.latencies
+        assert res.latencies == lats  # SLO threshold never affects dynamics
+        rates.append(res.slo_rate)
+    assert rates == sorted(rates)  # stricter SLO => violation rate can only grow
+
+
+def test_slo_violation_rate_helper():
+    lats = [0.1, 0.5, 1.0, 2.0]
+    assert slo_violation_rate(lats, 10.0) == 0.0
+    assert slo_violation_rate(lats, 0.05) == 1.0
+    r1, r2 = slo_violation_rate(lats, 0.6), slo_violation_rate(lats, 0.4)
+    assert r2 >= r1
+
+
+def test_percentile_nearest_rank():
+    vals = [1.0, 2.0, 3.0, 4.0]
+    assert percentile(vals, 0.50) == 2.0
+    assert percentile(vals, 0.99) == 4.0
+    assert math.isnan(percentile([], 0.5))
+
+
+# ---------------------------------------------------------------------------
+# continuous Shisha: drift handling
+# ---------------------------------------------------------------------------
+
+
+def _tuner(tuned, **kw):
+    return ContinuousShisha(
+        tuned["plat"],
+        tuned["layers"],
+        make_evaluator=lambda p: DatabaseEvaluator(p, tuned["layers"]),
+        **kw,
+    )
+
+
+def test_no_drift_no_retune(tuned):
+    traffic = PoissonTraffic(rate=0.5 * tuned["cap"], seed=5)
+    sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned), autotuner=_tuner(tuned))
+    res = sim.run(traffic.arrivals(60.0), 60.0)
+    assert res.reconfigs == []  # intrinsic imbalance must not trigger a re-tune
+
+
+def test_retune_fires_once_per_drift_state(tuned):
+    traffic = PoissonTraffic(rate=0.5 * tuned["cap"], seed=5)
+    times = tuned["ev"].stage_times(tuned["conf"])
+    bad_ep = tuned["conf"].eps[max(range(tuned["conf"].depth), key=times.__getitem__)]
+    sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned), autotuner=_tuner(tuned))
+    sim.schedule_slowdown(20.0, bad_ep, 3.0)
+    res = sim.run(traffic.arrivals(250.0), 250.0)
+    assert len(res.reconfigs) == 1
+    assert res.reconfigs[0]["kind"] == "slowdown"
+
+
+def test_dropout_recovery_at_least_90_percent(tuned):
+    """Regression: continuous re-tuning recovers >=90% of pre-fault throughput."""
+    traffic = PoissonTraffic(rate=0.5 * tuned["cap"], seed=1)
+    times = tuned["ev"].stage_times(tuned["conf"])
+    bad_ep = tuned["conf"].eps[max(range(tuned["conf"].depth), key=times.__getitem__)]
+
+    results = {}
+    for arm in ("static", "continuous"):
+        tuner = _tuner(tuned) if arm == "continuous" else None
+        sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned), autotuner=tuner)
+        sim.schedule_dropout(60.0, bad_ep)
+        results[arm] = sim.run(traffic.arrivals(300.0), 300.0)
+
+    cont = results["continuous"]
+    assert len(cont.reconfigs) == 1
+    rc = cont.reconfigs[0]
+    assert rc["kind"] == "dropout"
+    assert rc["model_throughput"] >= 0.9 * tuned["cap"]
+    assert cont.n_completed > results["static"].n_completed
+    assert cont.throughput_rps > results["static"].throughput_rps
+
+
+def test_revival_retune_reclaims_revived_ep(tuned):
+    """A dead EP coming back triggers a recovery re-seed onto it."""
+    traffic = PoissonTraffic(rate=0.5 * tuned["cap"], seed=5)
+    times = tuned["ev"].stage_times(tuned["conf"])
+    bad_ep = tuned["conf"].eps[max(range(tuned["conf"].depth), key=times.__getitem__)]
+    sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned), autotuner=_tuner(tuned))
+    sim.schedule_dropout(20.0, bad_ep)
+    sim.schedule_revival(200.0, bad_ep)
+    res = sim.run(traffic.arrivals(400.0), 400.0)
+    kinds = [r["kind"] for r in res.reconfigs]
+    assert kinds == ["dropout", "recovery"]
+    assert res.reconfigs[1]["model_throughput"] >= 0.95 * tuned["cap"]
+
+
+def test_recovery_retune_reclaims_recovered_ep(tuned):
+    """When a derate eases back, continuous Shisha re-seeds to reclaim it."""
+    traffic = PoissonTraffic(rate=0.5 * tuned["cap"], seed=5)
+    times = tuned["ev"].stage_times(tuned["conf"])
+    bad_ep = tuned["conf"].eps[max(range(tuned["conf"].depth), key=times.__getitem__)]
+    sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned), autotuner=_tuner(tuned))
+    sim.schedule_slowdown(20.0, bad_ep, 3.0)
+    sim.schedule_slowdown(200.0, bad_ep, 1.0 / 3.0)  # back to full speed
+    res = sim.run(traffic.arrivals(400.0), 400.0)
+    kinds = [r["kind"] for r in res.reconfigs]
+    assert kinds == ["slowdown", "recovery"]
+    # the recovery re-tune restores (model) capacity to the pre-fault level
+    assert res.reconfigs[1]["model_throughput"] >= 0.95 * tuned["cap"]
+
+
+def test_depth_reducing_reconfig_with_in_flight_batches(tuned):
+    """Regression: pre-reconfig _DONE events must not touch the new stages.
+
+    A retune that shrinks the pipeline while batches are in flight used to
+    either crash (stale stage index past the new depth) or prematurely
+    complete a new batch (stale token matching a fresh stage).
+    """
+    from repro.core import PipelineConfig
+    from repro.serve import Retune
+
+    one_stage = PipelineConfig(stages=(len(tuned["layers"]),), eps=(0,))
+
+    class CollapseTuner:
+        def __init__(self):
+            self.fired = False
+
+        def observe(self, t, conf, observed, drift, dead):
+            if self.fired:
+                return None
+            self.fired = True
+            return Retune(
+                conf=one_stage,
+                tuning_cost=0.5,
+                downtime=0.01,
+                kind="slowdown",
+                model_throughput=1.0,
+                tune_result=None,
+            )
+
+    # 2x overload keeps every stage busy, so batches are in flight when the
+    # 8-stage conf collapses to 1 stage
+    traffic = PoissonTraffic(rate=2.0 * tuned["cap"], seed=5)
+    sim = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned), autotuner=CollapseTuner())
+    res = sim.run(traffic.arrivals(30.0), 30.0)  # used to raise IndexError
+    assert len(res.reconfigs) == 1
+    assert res.n_arrived == res.n_completed + res.n_in_flight + res.n_queued
+    assert res.n_completed > 0
+
+
+def test_retuned_conf_avoids_dead_ep(tuned):
+    tuner = _tuner(tuned)
+    drift = EPDerates(factors=(1.0,) * tuned["plat"].n_eps)
+    dead = frozenset({tuned["conf"].eps[0]})
+    observed = [math.inf if tuned["conf"].eps[s] in dead else 0.1 for s in range(tuned["conf"].depth)]
+    retune = tuner.observe(1.0, tuned["conf"], observed, drift, dead)
+    assert retune is not None and retune.kind == "dropout"
+    assert not set(retune.conf.eps) & dead
+    assert retune.conf.n_layers == len(tuned["layers"])
+
+
+def test_drifted_platform_model(tuned):
+    plat = tuned["plat"]
+    f = [1.0] * plat.n_eps
+    f[2] = 2.0
+    model = drifted_platform(plat, EPDerates(factors=tuple(f)), dead=frozenset({5}))
+    assert model.eps[2].flops == pytest.approx(plat.eps[2].flops / 2.0)
+    assert model.ranked()[-1] == 5  # dead EP buried at the bottom of H_e
+    assert model.n_eps == plat.n_eps  # indices stay comparable
+
+
+# ---------------------------------------------------------------------------
+# multi-tenancy: partitioning
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["interleaved", "blocked", "proportional"])
+def test_partitions_are_disjoint_and_cover(strategy):
+    plat = paper_platform(8)
+    parts = partition_eps(plat, 3, strategy)
+    seen = [ep for p in parts for ep in p]
+    assert sorted(seen) == list(range(8))
+    assert all(len(p) >= 1 for p in parts)
+
+
+def test_interleaved_shares_feps_fairly():
+    plat = paper_platform(8)  # 4 FEPs, 4 SEPs
+    parts = partition_eps(plat, 2, "interleaved")
+    feps = set(plat.feps)
+    assert all(len(set(p) & feps) == 2 for p in parts)
+
+
+def test_blocked_gives_tenant0_the_fast_block():
+    plat = paper_platform(8)
+    parts = partition_eps(plat, 2, "blocked")
+    assert set(parts[0]) == set(plat.ranked()[:4])
+
+
+def test_subplatform_reindexes():
+    plat = paper_platform(8)
+    sub = subplatform(plat, (6, 1), "sub")
+    assert sub.n_eps == 2
+    assert sub.eps[0].name == plat.eps[6].name
+    assert sub.eps[1].name == plat.eps[1].name

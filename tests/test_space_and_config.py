@@ -3,6 +3,8 @@
 import itertools
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PipelineConfig, compositions, enumerate_configs, random_config, space_size

@@ -1,0 +1,130 @@
+"""Deterministic tie-breaking in Alg. 2's pick_target + Trace caching.
+
+These tests run without hypothesis (unlike test_core_scheduler.py) so the
+core tuner invariants stay covered on minimal installs.
+"""
+
+import pytest
+
+from repro.core import (
+    AnalyticEvaluator,
+    DatabaseEvaluator,
+    PipelineConfig,
+    Trace,
+    paper_platform,
+    pick_target,
+    tune,
+    weights,
+)
+from repro.models.cnn import network_layers
+
+# ---------------------------------------------------------------------------
+# pick_target tie-breaks (crafted platforms; all candidate EPs same class)
+# ---------------------------------------------------------------------------
+
+
+def _all_fep_platform(n=4):
+    return paper_platform(n, fep_fraction=1.0)
+
+
+def test_nfep_full_tie_resolves_to_lowest_stage_index():
+    # slowest in the middle; stages 0 and 2 tie on distance AND beat
+    plat = _all_fep_platform(3)
+    conf = PipelineConfig(stages=(2, 4, 2), eps=(0, 1, 2))
+    times = [1.0, 5.0, 1.0]
+    assert pick_target(conf, times, 1, plat, "nfep") == 0
+
+
+def test_nlfep_full_tie_resolves_to_lowest_stage_index():
+    plat = _all_fep_platform(3)
+    conf = PipelineConfig(stages=(2, 4, 2), eps=(0, 1, 2))
+    times = [1.0, 5.0, 1.0]
+    assert pick_target(conf, times, 1, plat, "nlfep") == 0
+
+
+def test_nfep_distance_tie_broken_by_load():
+    # equal distance, unequal beat: nfep must take the lighter stage
+    plat = _all_fep_platform(3)
+    conf = PipelineConfig(stages=(2, 4, 2), eps=(0, 1, 2))
+    times = [2.0, 5.0, 1.0]
+    assert pick_target(conf, times, 1, plat, "nfep") == 2
+
+
+def test_nlfep_load_tie_broken_by_distance_then_index():
+    # stages 1 and 3 tie on beat (1.0) AND distance (1) from slowest=2:
+    # the (beat, distance, index) key must resolve to the lower index
+    plat = _all_fep_platform(4)
+    conf = PipelineConfig(stages=(2, 2, 4, 2), eps=(0, 1, 2, 3))
+    times = [1.0, 1.0, 5.0, 1.0]
+    assert pick_target(conf, times, 2, plat, "nlfep") == 1
+
+
+def test_nfep_vs_nlfep_disagree_deterministically():
+    # nfep goes to the nearest stage even if heavier; nlfep to the lightest
+    plat = _all_fep_platform(4)
+    conf = PipelineConfig(stages=(2, 2, 4, 2), eps=(0, 1, 2, 3))
+    times = [0.5, 3.0, 5.0, 3.0]
+    assert pick_target(conf, times, 2, plat, "nfep") == 1
+    assert pick_target(conf, times, 2, plat, "nlfep") == 0
+
+
+def test_fast_ep_candidates_preferred_over_nearer_slow():
+    # mixed platform: a nearer SEP-hosted stage loses to a farther FEP stage
+    plat = paper_platform(4)  # EPs 0,1 fast; 2,3 slow
+    conf = PipelineConfig(stages=(4, 2, 2), eps=(2, 3, 0))  # slowest on SEP
+    times = [5.0, 1.0, 1.0]
+    assert pick_target(conf, times, 0, plat, "nfep") == 2
+
+
+def test_tune_deterministic_after_stage_collapse():
+    """Two identical tune runs stay in lock-step even through collapses."""
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    confs = []
+    for _ in range(2):
+        trace = Trace(DatabaseEvaluator(plat, layers))
+        res = tune(
+            PipelineConfig(
+                stages=(1, 1, 1, 1, 1, 13), eps=(0, 1, 2, 3, 4, 5)
+            ),  # heavy tail stage forces collapses
+            trace,
+            alpha=10,
+        )
+        confs.append([t.conf for t in trace.trials])
+    assert confs[0] == confs[1]
+
+
+# ---------------------------------------------------------------------------
+# Trace cache (satellite: _cache was write-only before)
+# ---------------------------------------------------------------------------
+
+
+def _mk_trace(**kw):
+    layers = network_layers("alexnet")
+    plat = paper_platform(4)
+    return Trace(AnalyticEvaluator(plat, layers), **kw), PipelineConfig(
+        stages=(2, 3), eps=(0, 1)
+    )
+
+
+def test_trace_revisit_paid_by_default():
+    trace, conf = _mk_trace()
+    tp1 = trace.execute(conf)
+    w1 = trace.wall
+    tp2 = trace.execute(conf)
+    assert tp1 == tp2
+    assert trace.n_trials == 2  # both visits recorded
+    assert trace.wall > w1  # and both visits paid for
+
+
+def test_trace_cache_short_circuits_when_enabled():
+    trace, conf = _mk_trace(use_cache=True)
+    tp1 = trace.execute(conf)
+    w1 = trace.wall
+    tp2 = trace.execute(conf)
+    assert tp1 == tp2
+    assert trace.n_trials == 1  # revisit served from cache
+    assert trace.wall == w1  # for free
+    other = PipelineConfig(stages=(1, 4), eps=(0, 1))
+    trace.execute(other)
+    assert trace.n_trials == 2  # new confs still measured
