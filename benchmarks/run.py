@@ -31,6 +31,7 @@ def main() -> None:
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "serve_sim": lambda: serve_sim.run(quick=args.quick),
+        "multitenant_drift": lambda: serve_sim.run_multitenant_drift(quick=args.quick),
     }
     if args.only:
         keep = set(args.only.split(","))

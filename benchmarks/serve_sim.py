@@ -17,8 +17,17 @@ Two experiments, both fully deterministic (seeded traffic, database oracle):
       proportional), compared against SynthNet serving alone on the full
       platform under the same traffic.
 
+A third experiment, **multitenant_drift** (own harness entry so CI can
+smoke it alone), co-serves both tenants on one shared clock and drops a
+FEP one third into the horizon: the *static* arm leaves the launch
+partition in place (the victim re-tunes within what remains), the
+*elastic* arm lets the ElasticPartitioner steal the cheapest
+at-risk-priced EP from the headroomed donor.  Both arms replay the
+identical recorded traffic and fault script.
+
 Reported per arm: p50/p95/p99 latency, SLO-violation rate, throughput;
-JSON payload lands in experiments/benchmarks/serve_sim.json.
+JSON payloads land in experiments/benchmarks/serve_sim.json and
+experiments/benchmarks/multitenant_drift.json.
 """
 
 from __future__ import annotations
@@ -32,10 +41,14 @@ from repro.serve import (
     ContinuousShisha,
     MMPPTraffic,
     PoissonTraffic,
+    ReplayTraffic,
     ServingSimulator,
     SimResult,
     Tenant,
     co_schedule,
+    co_serve,
+    partition_eps,
+    subplatform,
 )
 
 from .common import save
@@ -182,6 +195,124 @@ def tenancy_scenario(quick: bool, verbose: bool) -> dict:
     }
 
 
+def multitenant_drift_scenario(quick: bool, verbose: bool) -> dict:
+    """(c) shared-clock co-serving: static vs elastic partitions under one
+    scripted FEP dropout at t = horizon/3, identical replayed traffic."""
+    plat = paper_platform(8)
+    horizon = 150.0 if quick else 300.0
+    fault_t = horizon / 3.0
+
+    # tune each tenant on its launch (interleaved) partition to express
+    # load as a fraction of the capacity it actually owns
+    parts = partition_eps(plat, 2, "interleaved")
+    caps, layer_sets = {}, {}
+    for name, part in zip(("synthnet", "resnet50"), parts):
+        layers = network_layers(name)
+        ev = DatabaseEvaluator(subplatform(plat, part, name), layers)
+        caps[name] = run_shisha(weights(layers), Trace(ev), "H3").result.best_throughput
+        layer_sets[name] = layers
+
+    # victim: steady load at 65% of its partition capacity with a 3x-fill
+    # SLO; donor: bursty but deeply headroomed (8-30% of capacity), so the
+    # at-risk pricing can afford to hand over a fast EP
+    tenants = [
+        Tenant(
+            name="synthnet",
+            layers=tuple(layer_sets["synthnet"]),
+            traffic=ReplayTraffic.record(
+                PoissonTraffic(rate=0.65 * caps["synthnet"], seed=11), horizon
+            ),
+            slo=2.7,
+        ),
+        Tenant(
+            name="resnet50",
+            layers=tuple(layer_sets["resnet50"]),
+            traffic=ReplayTraffic.record(
+                MMPPTraffic(
+                    rate_low=0.08 * caps["resnet50"],
+                    rate_high=0.30 * caps["resnet50"],
+                    seed=12,
+                ),
+                horizon,
+            ),
+            slo=0.8,
+        ),
+    ]
+    # drop the first FEP of the victim's partition (global index)
+    fep = next(e for e in parts[0] if plat.eps[e].is_fep)
+    faults = [("dropout", fault_t, fep)]
+
+    arms = {}
+    for arm, elastic in (("static", False), ("elastic", True)):
+        res = co_serve(
+            plat,
+            tenants,
+            horizon=horizon,
+            elastic=elastic,
+            batch_policy_search=True,
+            measure_batches=2,
+            alpha=4,
+            faults=faults,
+        )
+        arms[arm] = res
+        for r in res.results:
+            _print_arm(f"mt_drift/{arm}/{r.tenant.name}", r.sim, verbose)
+
+    beats = arms["elastic"].aggregate_slo_rate < arms["static"].aggregate_slo_rate
+    if verbose:
+        print(
+            f"  serve_sim mt_drift: elastic {arms['elastic'].aggregate_slo_rate:.3f} vs "
+            f"static {arms['static'].aggregate_slo_rate:.3f} agg SLO viol -> "
+            f"elastic beats static: {beats}"
+        )
+    return {
+        "n_eps": 8,
+        "horizon_s": horizon,
+        "fault": {"t": fault_t, "ep": fep, "kind": "dropout"},
+        "capacity_rps": caps,
+        **{
+            arm: {
+                "aggregate_slo_rate": res.aggregate_slo_rate,
+                "aggregate_throughput_rps": res.aggregate_throughput_rps,
+                "final_partitions": {k: list(v) for k, v in res.partitions.items()},
+                "tenants": {
+                    r.tenant.name: {
+                        "eps": list(r.ep_idxs),
+                        "batch_policy": list(r.batch_policy or ()),
+                        **_metrics(r.sim),
+                    }
+                    for r in res.results
+                },
+                "repartitions": [
+                    {
+                        "t": e.t,
+                        "dead_ep": e.dead_ep,
+                        "victim": e.victim,
+                        "donor": e.donor,
+                        "stolen_ep": e.stolen_ep,
+                        "price_rps": e.price,
+                        "partitions": {k: list(v) for k, v in e.partitions.items()},
+                        "retune_wall_costs_s": e.retune_costs,
+                    }
+                    for e in res.repartitions
+                ],
+            }
+            for arm, res in arms.items()
+        },
+        "elastic_beats_static": beats,
+    }
+
+
+def run_multitenant_drift(verbose: bool = True, quick: bool = False) -> dict:
+    payload = multitenant_drift_scenario(quick, verbose)
+    save("multitenant_drift", payload)
+    if not payload["elastic_beats_static"]:
+        raise AssertionError(
+            "elastic re-partitioning failed to beat the static partition"
+        )
+    return payload
+
+
 def run(verbose: bool = True, quick: bool = False) -> dict:
     payload = {
         "drift": drift_scenario(quick, verbose),
@@ -196,8 +327,17 @@ def run(verbose: bool = True, quick: bool = False) -> dict:
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--quick", action="store_true", help="shorter horizons, fewer strategies")
+    ap.add_argument(
+        "--scenario",
+        default="all",
+        choices=("all", "serve_sim", "multitenant_drift"),
+        help="which experiment set to run",
+    )
     args = ap.parse_args()
-    run(verbose=True, quick=args.quick)
+    if args.scenario in ("all", "serve_sim"):
+        run(verbose=True, quick=args.quick)
+    if args.scenario in ("all", "multitenant_drift"):
+        run_multitenant_drift(verbose=True, quick=args.quick)
 
 
 if __name__ == "__main__":

@@ -1,7 +1,8 @@
-"""Serving-under-traffic demo: continuous Shisha rides out a straggler.
+"""Serving-under-traffic demo: continuous Shisha rides out faults.
 
     PYTHONPATH=src python examples/serve_traffic.py
 
+Act 1 — single tenant, straggler:
 1. Tunes SynthNet onto the paper's 8-EP big/LITTLE platform (Alg. 1 + 2).
 2. Serves bursty (MMPP) traffic through the discrete-event simulator.
 3. Injects a 3x slowdown on the bottleneck EP mid-run; the continuous
@@ -9,12 +10,26 @@
    platform model (paying the exploration time on the simulated clock),
    and installs the recovered schedule.
 4. Prints the load timeline so you can watch the queue build and drain.
+
+Act 2 — two tenants on one shared clock, EP dropout:
+5. Co-serves SynthNet + ResNet50 on disjoint partitions of the same
+   platform and kills one of SynthNet's fast EPs mid-run.  The elastic
+   partitioner prices every donor EP in requests/second of at-risk
+   demand and lets SynthNet steal the cheapest one; both affected
+   tenants re-tune, paying the full exploration wall-clock.
 """
 
 from repro.core import DatabaseEvaluator, Trace, paper_platform, weights
 from repro.core.heuristics import run_shisha
 from repro.models.cnn import network_layers
-from repro.serve import ContinuousShisha, MMPPTraffic, ServingSimulator
+from repro.serve import (
+    ContinuousShisha,
+    MMPPTraffic,
+    PoissonTraffic,
+    ServingSimulator,
+    Tenant,
+    co_serve,
+)
 
 HORIZON = 300.0
 FAULT_T = 60.0
@@ -51,3 +66,41 @@ if res.load_samples:
     for t, n in res.load_samples[::step]:
         marks = "#" * max(1, round(40 * n / peak)) if n else ""
         print(f"[load ] {t:6.1f} {marks} {n}")
+
+# --- Act 2: elastic multi-tenancy under an EP dropout ----------------------
+
+print()
+print("[multi] co-serving synthnet + resnet50 on one shared clock")
+r50 = network_layers("resnet50")
+tenants = [
+    Tenant(
+        name="synthnet",
+        layers=tuple(layers),
+        traffic=PoissonTraffic(rate=0.25 * cap, seed=21),
+        slo=2.7,
+    ),
+    Tenant(
+        name="resnet50",
+        layers=tuple(r50),
+        traffic=MMPPTraffic(rate_low=0.5, rate_high=2.0, seed=22),
+        slo=0.8,
+    ),
+]
+out = co_serve(
+    plat,
+    tenants,
+    horizon=HORIZON,
+    elastic=True,
+    batch_policy_search=True,
+    measure_batches=2,
+    alpha=4,
+    faults=[("dropout", FAULT_T, 0)],  # kill global FEP0 mid-run
+)
+for r in out.results:
+    print(f"[multi] {r.tenant.name:9s} eps={list(r.ep_idxs)} {r.sim.summary()}")
+for e in out.repartitions:
+    print(
+        f"[elast] t={e.t:.1f}s EP{e.dead_ep} died; {e.victim} stole "
+        f"EP{e.stolen_ep} from {e.donor} (price {e.price:.2f} req/s at risk); "
+        f"re-tune costs " + ", ".join(f"{k}={v:.1f}s" for k, v in e.retune_costs.items())
+    )

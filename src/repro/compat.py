@@ -1,0 +1,25 @@
+"""Version-compat shims for the JAX API surface this repo relies on.
+
+``shard_map`` moved from ``jax.experimental.shard_map`` to top-level
+``jax.shard_map`` (and its replication check was renamed ``check_rep`` ->
+``check_vma``) across the JAX versions this repo supports.  Route every
+call through one helper so call sites stay on the modern spelling and the
+repo keeps working on either side of the move.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` where available, else the experimental spelling."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+    )

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..compat import shard_map
 from ..core.config import PipelineConfig
 from ..core.cost_model import Layer
 from ..core.evaluator import AnalyticEvaluator
@@ -164,7 +165,7 @@ class PipelineRunner:
             )
             return outs
 
-        return jax.shard_map(
+        return shard_map(
             local,
             mesh=mesh,
             in_specs=P(),  # microbatches replicated; stages own the compute

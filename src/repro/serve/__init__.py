@@ -10,11 +10,13 @@ worth paying Algorithm 2's online exploration cost again?".
   * :mod:`.simulator`    — event-driven pipeline server over the evaluator
                            stage-time model: queues, micro-batching, tail
                            latency, SLO accounting, EP occupancy.
-  * :mod:`.autotuner`    — continuous Shisha: drift detection and
-                           mid-flight re-tuning charged to the simulated
-                           clock.
-  * :mod:`.multitenant`  — disjoint EP partitioning for co-scheduling
-                           several pipelines on one platform.
+  * :mod:`.autotuner`    — continuous Shisha: drift detection, mid-flight
+                           re-tuning and batch-knob search charged to the
+                           simulated clock.
+  * :mod:`.multitenant`  — disjoint EP partitioning plus the shared-clock
+                           elastic co-simulator: all tenants on one
+                           discrete-event timeline, with mid-flight EP
+                           re-allocation under faults.
 """
 
 from .autotuner import (
@@ -23,17 +25,25 @@ from .autotuner import (
     DriftDetector,
     Retune,
     drifted_platform,
+    tune_batch_policy,
 )
 from .multitenant import (
     PARTITION_STRATEGIES,
+    CoServeResult,
+    ElasticPartitioner,
+    RepartitionEvent,
+    SharedClockCoSimulator,
     Tenant,
     TenantResult,
     co_schedule,
+    co_serve,
     compare_partitions,
     partition_eps,
     subplatform,
 )
 from .simulator import (
+    EventLoop,
+    Replatform,
     Request,
     ServingSimulator,
     SimResult,
@@ -49,26 +59,34 @@ from .traffic import (
 )
 
 __all__ = [
+    "CoServeResult",
     "ContinuousShisha",
     "DiurnalTraffic",
     "Drift",
     "DriftDetector",
+    "ElasticPartitioner",
+    "EventLoop",
     "MMPPTraffic",
     "PARTITION_STRATEGIES",
     "PoissonTraffic",
+    "RepartitionEvent",
+    "Replatform",
     "ReplayTraffic",
     "Request",
     "Retune",
     "ServingSimulator",
+    "SharedClockCoSimulator",
     "SimResult",
     "Tenant",
     "TenantResult",
     "TrafficGenerator",
     "co_schedule",
+    "co_serve",
     "compare_partitions",
     "drifted_platform",
     "partition_eps",
     "percentile",
     "slo_violation_rate",
     "subplatform",
+    "tune_batch_policy",
 ]

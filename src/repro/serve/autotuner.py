@@ -115,8 +115,15 @@ class DriftDetector:
         dead_in_use = [ep for ep in conf.eps if ep in dead]
         if dead_in_use:
             return Drift("dropout", f"dead EPs in use: {dead_in_use}")
+        # a factors tuple may be shorter than the platform (e.g. a stale
+        # monitor snapshot after an elastic re-partition grew the EP set);
+        # missing entries mean "no derate observed", exactly like
+        # drifted_platform's bounds check
         slowed = [
-            ep for ep in conf.eps if drift.factors[ep] > self.slowdown_threshold
+            ep
+            for ep in conf.eps
+            if (drift.factors[ep] if ep < len(drift.factors) else 1.0)
+            > self.slowdown_threshold
         ]
         if slowed:
             return Drift("slowdown", f"derated EPs in use: {slowed}")
@@ -148,10 +155,61 @@ class Retune:
     kind: str
     model_throughput: float
     tune_result: TuneResult
+    #: per-stage max micro-batch found by the batch-knob search (None keeps
+    #: the simulator's flat ``max_batch``)
+    batch_policy: tuple[int, ...] | None = None
 
     @property
     def cost(self) -> float:
         return self.tuning_cost + self.downtime
+
+
+def tune_batch_policy(
+    trace: Trace,
+    conf: PipelineConfig,
+    slo: float,
+    *,
+    batch_efficiency: float = 0.7,
+    max_batch_cap: int = 8,
+    latency_margin: float = 0.5,
+) -> tuple[int, ...]:
+    """Per-stage ``max_batch`` search, explored alongside Algorithm 2 moves.
+
+    The simulator serves a batch of ``b`` in ``t_stage * (1 + (b-1) * eff)``,
+    so a stage's effective per-request capacity is ``b / batched_t`` — larger
+    batches amortise the beat exactly like larger measure batches amortise
+    reconfiguration in :class:`~repro.core.evaluator.Trace`, at the price of
+    latency.  Starting from all-1, stages are visited bottleneck-first and
+    each is granted the largest power-of-two batch whose *full-batch* pipeline
+    latency stays within ``latency_margin * slo`` (the remaining margin is
+    queueing headroom).  Every knob candidate tried is a real online trial:
+    it is charged to ``trace`` (reconfig + fill + ``measure_batches`` beats)
+    so the exploration shows up in ``Trace.wall`` like any Algorithm 2 move.
+    """
+    times = trace.evaluator.stage_times(conf)
+    policy = [1] * conf.depth
+
+    def batched(s: int, b: int) -> float:
+        return times[s] * (1.0 + (b - 1) * batch_efficiency)
+
+    candidates = []
+    b = 2
+    while b <= max_batch_cap:
+        candidates.append(b)
+        b *= 2
+    # bottleneck-first: the slowest stage gets latency headroom before the
+    # cheap stages spend it (ties broken by stage index for determinism)
+    for s in sorted(range(conf.depth), key=lambda i: (-times[i], i)):
+        for b in candidates:
+            lat = sum(
+                batched(i, b if i == s else policy[i]) for i in range(conf.depth)
+            )
+            if lat > latency_margin * slo:
+                break
+            trace.execute(conf)  # trying the knob online costs a measurement
+            if b / batched(s, b) > policy[s] / batched(s, policy[s]):
+                policy[s] = b
+    return tuple(policy)
 
 
 @dataclasses.dataclass
@@ -176,6 +234,14 @@ class ContinuousShisha:
     cooldown: float = 1.0
     measure_batches: int = 8
     reconfig_overhead: float = 0.05
+    #: when set, every re-tune also runs the per-stage batch-knob search
+    #: (:func:`tune_batch_policy`) against this latency SLO, charging the
+    #: extra trials to the same exploration window
+    slo: float | None = None
+    batch_policy_search: bool = False
+    max_batch_cap: int = 8
+    batch_efficiency: float = 0.7
+    batch_latency_margin: float = 0.5
 
     def __post_init__(self):
         if self.make_evaluator is None:
@@ -217,15 +283,29 @@ class ContinuousShisha:
             return None
         if t - self._last_t < self.cooldown:
             return None
+        retune = self._explore(drift, dead, event.kind, warm_conf=conf)
+        self._last_t = t
+        self._handled = fingerprint
+        return retune
+
+    def _explore(
+        self,
+        drift: EPDerates,
+        dead: FrozenSet[int],
+        kind: str,
+        warm_conf: PipelineConfig | None = None,
+    ) -> Retune:
+        """Run Algorithm 2 (plus the batch-knob search) on the drift model."""
         model = drifted_platform(self.platform, drift, dead)
         trace = Trace(
             self.make_evaluator(model),
             measure_batches=self.measure_batches,
             reconfig_overhead=self.reconfig_overhead,
         )
-        if event.kind in ("dropout", "recovery"):
+        if kind in ("dropout", "recovery", "repartition") or warm_conf is None:
             # re-seed via Algorithm 1: a warm start cannot drop a dead EP's
-            # stage by itself, nor grow stages onto recovered hardware
+            # stage by itself, nor grow stages onto recovered (or newly
+            # granted) hardware
             n_alive = model.n_eps - len(dead)
             if n_alive < 1:
                 raise RuntimeError("all EPs dead; nothing to schedule onto")
@@ -238,17 +318,63 @@ class ContinuousShisha:
             result = tune(seed, trace, alpha=self.alpha, balancing=self.balancing)
         else:
             # warm start from the serving configuration (paper's online mode)
-            result = tune(conf, trace, alpha=self.alpha, balancing=self.balancing)
-        self._last_t = t
-        self._handled = fingerprint
+            result = tune(warm_conf, trace, alpha=self.alpha, balancing=self.balancing)
+        policy = None
+        if self.batch_policy_search and self.slo is not None:
+            policy = tune_batch_policy(
+                trace,
+                result.best_conf,
+                self.slo,
+                batch_efficiency=self.batch_efficiency,
+                max_batch_cap=self.max_batch_cap,
+                latency_margin=self.batch_latency_margin,
+            )
         self._model_ev = trace.evaluator  # new model baseline for drift checks
         retune = Retune(
             conf=result.best_conf,
             tuning_cost=trace.wall,
             downtime=self.reconfig_downtime,
-            kind=event.kind,
+            kind=kind,
             model_throughput=result.best_throughput,
             tune_result=result,
+            batch_policy=policy,
         )
         self.history.append(retune)
+        return retune
+
+    def retarget(
+        self,
+        platform: Platform,
+        make_evaluator: Callable[[Platform], AnalyticEvaluator] | None = None,
+    ) -> None:
+        """Point the tuner at a new (sub-)platform after a re-partition.
+
+        The drift fingerprint baseline resets to the new platform's no-drift
+        state; callers that immediately :meth:`force_retune` will overwrite
+        it with the actual observed state.
+        """
+        self.platform = platform
+        if make_evaluator is not None:
+            self.make_evaluator = make_evaluator
+        self._handled = ((1.0,) * platform.n_eps, frozenset())
+        self._model_ev = self.make_evaluator(platform)
+
+    def force_retune(
+        self,
+        t: float,
+        drift: EPDerates,
+        dead: FrozenSet[int],
+        kind: str = "repartition",
+    ) -> Retune:
+        """Unconditional re-seed + tune, bypassing the detector and cooldown.
+
+        Used by the elastic multi-tenant co-simulator after a partition
+        change: the EP set itself moved, so there is no drift *event* to
+        detect — the schedule is simply for the wrong machine.  The full
+        ``Trace.wall`` exploration cost is returned on the Retune for the
+        caller to charge to its clock.
+        """
+        retune = self._explore(drift, dead, kind)
+        self._last_t = t
+        self._handled = (drift.factors, frozenset(dead))
         return retune

@@ -3,13 +3,10 @@
 The paper schedules one network onto one chiplet platform; a serving
 deployment runs many.  Because Shisha's EP assignment is injective (each
 stage owns its EP), the natural multi-tenant form is a *disjoint partition*
-of the platform's EPs: each tenant receives a sub-platform, is seeded and
-tuned independently (Algorithms 1+2 unchanged), and is simulated under its
-own traffic.  Disjointness makes the per-tenant simulations exact — there
-is no cross-tenant interference channel other than the partition choice
-itself, which is precisely the knob this module compares.
+of the platform's EPs: each tenant receives a sub-platform and is seeded
+and tuned independently (Algorithms 1+2 unchanged).
 
-Partition strategies over the H_e ranking (``Platform.ranked()``):
+Launch-time partition strategies over the H_e ranking (``Platform.ranked()``):
 
   * ``interleaved``   — deal ranked EPs round-robin, so every tenant gets a
                         fair FEP/SEP mix (heterogeneity-preserving).
@@ -17,18 +14,41 @@ Partition strategies over the H_e ranking (``Platform.ranked()``):
                         fastest block (priority tiers).
   * ``proportional``  — deal each ranked EP to the tenant with the largest
                         unmet ``share`` (weighted fairness).
+
+Beyond the launch-time split, this module co-simulates all tenants on one
+**shared clock** (:class:`SharedClockCoSimulator` / :func:`co_serve`): every
+tenant's stage queues advance on a single discrete-event timeline over the
+global platform, scripted faults hit *global* EP indices so whichever
+tenant owns the EP sees the drift, and — in elastic mode — an
+:class:`ElasticPartitioner` re-runs the partition mid-flight: a tenant
+whose partition lost an EP steals the lowest-marginal-value EP from donor
+tenants (priced by each donor's model throughput and SLO pressure), after
+which every affected tenant re-tunes via its
+:class:`~repro.serve.autotuner.ContinuousShisha`, paying the full
+``Trace.wall`` exploration cost on the shared clock.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Callable, Sequence
 
 from ..core.cost_model import Layer, weights as layer_weights
 from ..core.evaluator import AnalyticEvaluator, DatabaseEvaluator, Trace
 from ..core.heuristics import run_shisha
 from ..core.platform import Platform
-from .simulator import ServingSimulator, SimResult
+from ..pipeline.hetero import EPDerates
+from .autotuner import ContinuousShisha, drifted_platform, tune_batch_policy
+from .simulator import (
+    _MONITOR,
+    _PLATFORM,
+    _RECONFIG,
+    EventLoop,
+    Replatform,
+    ServingSimulator,
+    SimResult,
+)
 from .traffic import TrafficGenerator
 
 PARTITION_STRATEGIES = ("interleaved", "blocked", "proportional")
@@ -68,7 +88,16 @@ def partition_eps(
         total = sum(shares)
         sizes = [max(1, round(platform.n_eps * s / total)) for s in shares]
         while sum(sizes) > platform.n_eps:
-            sizes[sizes.index(max(sizes))] -= 1
+            # rebalance by shrinking the largest *shrinkable* size: taking a
+            # tenant to 0 would trip the no-EPs invariant below under
+            # sufficiently skewed shares
+            i = max(range(n_parts), key=lambda p: (sizes[p] > 1, sizes[p], -p))
+            if sizes[i] <= 1:
+                raise ValueError(
+                    f"cannot fit {n_parts} tenants with shares {shares} "
+                    f"onto {platform.n_eps} EPs"
+                )
+            sizes[i] -= 1
         while sum(sizes) < platform.n_eps:
             sizes[sizes.index(min(sizes))] += 1
         start = 0
@@ -97,11 +126,570 @@ def subplatform(platform: Platform, ep_idxs: Sequence[int], name: str) -> Platfo
 @dataclasses.dataclass
 class TenantResult:
     tenant: Tenant
-    ep_idxs: tuple[int, ...]  # global EP indices owned by this tenant
+    ep_idxs: tuple[int, ...]  # global EP indices owned by this tenant (final)
     conf_pretty: str
     model_throughput: float
     n_trials: int
     sim: SimResult
+    #: per-stage max micro-batch installed at launch (batch-knob search)
+    batch_policy: tuple[int, ...] | None = None
+
+
+@dataclasses.dataclass
+class RepartitionEvent:
+    """One elastic re-allocation, as recorded by the co-simulator."""
+
+    t: float
+    dead_ep: int  # global EP index whose death triggered the event
+    victim: str  # tenant that lost the EP
+    donor: str | None  # tenant that gave one up (None: nobody could)
+    stolen_ep: int | None  # global EP index moved donor -> victim
+    price: float | None  # donor's marginal value of the stolen EP
+    #: post-event global partitions (alive EPs only), tenant name -> indices
+    partitions: dict[str, tuple[int, ...]]
+    #: tenant name -> Trace.wall exploration seconds charged on the shared
+    #: clock for the forced re-tune this event caused
+    retune_costs: dict[str, float]
+
+
+class ElasticPartitioner:
+    """Mid-flight EP re-allocation across tenants.
+
+    When a global EP dies, the tenant owning it loses capacity its schedule
+    was tuned for.  Rather than leaving the victim to shrink, the
+    partitioner re-runs the partition: every *donor* tenant (anyone holding
+    at least two alive EPs) offers each of its EPs, and offers are valued
+    in the one currency the aggregate SLO metric is measured in —
+    **requests/second of demand put at risk**:
+
+        ``at_risk(tenant, C) = max(0, headroom * demand + urgency - C)``
+
+    where ``C`` is the *tuned* model throughput of a full Shisha re-tune
+    on the candidate EP set (Algorithm 1 seeds undervalue what tuning can
+    extract, so pricing re-tunes — pure model-side arithmetic, the
+    scheduler thinking rather than measuring, so it costs no simulated
+    time), ``demand`` is the tenant's observed arrival rate, ``headroom``
+    covers burstiness/queueing slack, and ``urgency = backlog / slo`` is
+    the SLO pressure of requests already waiting.  An offer's *price* is
+    the donor's at-risk increase from giving the EP up; the victim's
+    *gain* is its at-risk decrease from receiving it.  The victim steals
+    the offer with the largest positive surplus (gain minus price): a
+    donor with real headroom gives up even a fast EP almost for free, a
+    donor near saturation prices it high and keeps its partition, and an
+    EP the victim's pipeline cannot exploit (its bottleneck lies
+    elsewhere) is never stolen just because it is cheap.  Only the
+    re-tunes that follow a steal charge ``Trace.wall`` to the clock.
+    """
+
+    def __init__(
+        self,
+        platform: Platform,
+        make_evaluator: Callable[[Platform, Sequence[Layer]], AnalyticEvaluator],
+        heuristic: str = "H3",
+        headroom: float = 2.0,
+    ):
+        self.platform = platform
+        self.make_evaluator = make_evaluator
+        self.heuristic = heuristic
+        self.headroom = headroom
+        self._tp_cache: dict[tuple[str, tuple[int, ...]], float] = {}
+
+    def tuned_throughput(self, tenant: Tenant, part: Sequence[int]) -> float:
+        """Model throughput of a full Shisha re-tune of ``tenant`` on ``part``.
+
+        Cached per (tenant, EP set); ``use_cache`` also dedups revisits
+        inside the throwaway pricing trace.
+        """
+        key = (tenant.name, tuple(sorted(part)))
+        if key not in self._tp_cache:
+            if not part:
+                self._tp_cache[key] = 0.0
+            else:
+                sub = subplatform(self.platform, part, f"{self.platform.name}/price")
+                ev = self.make_evaluator(sub, tenant.layers)
+                sh = run_shisha(
+                    layer_weights(tenant.layers), Trace(ev, use_cache=True), self.heuristic
+                )
+                self._tp_cache[key] = sh.result.best_throughput
+        return self._tp_cache[key]
+
+    def _at_risk(self, capacity: float, demand: float, urgency: float) -> float:
+        return max(0.0, self.headroom * demand + urgency - capacity)
+
+    def price(
+        self, tenant: Tenant, part: Sequence[int], ep: int, demand: float, urgency: float
+    ) -> float:
+        """Donor-side price: req/s of demand put at risk by giving ``ep`` up."""
+        c_with = self.tuned_throughput(tenant, part)
+        c_without = self.tuned_throughput(tenant, [e for e in part if e != ep])
+        return self._at_risk(c_without, demand, urgency) - self._at_risk(
+            c_with, demand, urgency
+        )
+
+    def gain(
+        self, tenant: Tenant, part: Sequence[int], ep: int, demand: float, urgency: float
+    ) -> float:
+        """Victim-side value: req/s of at-risk demand recovered by ``ep``."""
+        c_now = self.tuned_throughput(tenant, part)
+        c_plus = self.tuned_throughput(tenant, list(part) + [ep])
+        if c_now <= 0 < c_plus:
+            return math.inf  # a tenant with no EPs must be re-housed
+        return self._at_risk(c_now, demand, urgency) - self._at_risk(
+            c_plus, demand, urgency
+        )
+
+    def rebalance(
+        self,
+        partitions: dict[str, tuple[int, ...]],
+        victim: str,
+        tenants: dict[str, Tenant],
+        loads: dict[str, tuple[float, float]],
+    ) -> tuple[str, int, float] | None:
+        """Pick (donor, ep, price) for ``victim`` to steal, or None.
+
+        ``loads`` maps tenant name to (observed demand req/s, urgency
+        req/s).  Returns the offer with the largest positive surplus
+        (victim gain minus donor price); None when no transfer is worth
+        it.  Deterministic: ties resolve to the lower price, then the
+        lower global EP index, then the donor name.
+        """
+        offers: list[tuple[float, float, int, str]] = []
+        v_part = partitions[victim]
+        v_demand, v_urgency = loads[victim]
+        for name, part in partitions.items():
+            if name == victim or len(part) < 2:
+                continue
+            d_demand, d_urgency = loads[name]
+            for ep in part:
+                price = self.price(tenants[name], part, ep, d_demand, d_urgency)
+                gain = self.gain(tenants[victim], v_part, ep, v_demand, v_urgency)
+                offers.append((gain - price, price, ep, name))
+        if not offers:
+            return None
+        offers.sort(key=lambda o: (-o[0], o[1], o[2], o[3]))
+        surplus, price, ep, donor = offers[0]
+        if surplus <= 0:
+            return None  # every offer hurts the donor more than it helps
+        return donor, ep, price
+
+
+class SharedClockCoSimulator:
+    """All tenants' stage queues on one discrete-event timeline.
+
+    Each tenant is a *lane*: a :class:`ServingSimulator` over its
+    sub-platform, bound to the shared :class:`EventLoop`.  Lanes never touch
+    each other's queues — the cross-tenant channels are exactly (a) the
+    partition, which the :class:`ElasticPartitioner` may rewrite mid-flight,
+    and (b) the global fault script, which hits global EP indices and lands
+    on whichever lane owns the EP at fault time.
+
+    The co-simulator's own monitor tick runs *before* the lanes' ticks at
+    equal timestamps (it is pushed first), so a re-partition decision
+    pre-empts a lane-local dropout re-seed that would otherwise pay a
+    redundant exploration window.
+    """
+
+    def __init__(
+        self,
+        platform: Platform,
+        tenants: Sequence[Tenant],
+        *,
+        strategy: str = "interleaved",
+        make_evaluator: Callable[[Platform, Sequence[Layer]], AnalyticEvaluator] | None = None,
+        heuristic: str = "H3",
+        max_batch: int = 4,
+        batch_efficiency: float = 0.7,
+        elastic: bool = True,
+        batch_policy_search: bool = False,
+        monitor_interval: float = 0.5,
+        measure_batches: int = 8,
+        alpha: int = 10,
+    ):
+        if make_evaluator is None:
+            make_evaluator = lambda p, layers: DatabaseEvaluator(p, layers)
+        self.platform = platform
+        self.tenants = list(tenants)
+        self.make_evaluator = make_evaluator
+        self.heuristic = heuristic
+        self.max_batch = max_batch
+        self.batch_efficiency = batch_efficiency
+        self.elastic = elastic
+        self.batch_policy_search = batch_policy_search
+        self.monitor_interval = monitor_interval
+        #: exploration-cost knobs for the lanes' mid-flight re-tunes: fewer
+        #: measurement batches / a smaller α shorten the window the old
+        #: (degraded) configuration keeps serving — the Shisha trade-off
+        self.measure_batches = measure_batches
+        self.alpha = alpha
+
+        self.loop = EventLoop()
+        parts = partition_eps(
+            platform, len(tenants), strategy, shares=[t.share for t in tenants]
+        )
+        #: tenant name -> global EP indices (alive only; maintained elastically)
+        self.partitions: dict[str, tuple[int, ...]] = {}
+        self.lanes: dict[str, ServingSimulator] = {}
+        self._launch: dict[str, dict] = {}
+        for tenant, ep_idxs in zip(self.tenants, parts):
+            self.partitions[tenant.name] = tuple(ep_idxs)
+            self.lanes[tenant.name] = self._build_lane(tenant, ep_idxs)
+        #: what each lane is *currently serving on* — lags ``partitions``
+        #: by the exploration window while a re-partition is in flight, and
+        #: is the mapping runtime fault effects must use
+        self._installed: dict[str, tuple[int, ...]] = dict(self.partitions)
+
+        self.elastic_partitioner = ElasticPartitioner(platform, make_evaluator, heuristic)
+        self.repartitions: list[RepartitionEvent] = []
+        self.global_drift: list[float] = [1.0] * platform.n_eps
+        self.global_dead: set[int] = set()
+        self._unhandled_dead: list[int] = []
+        self._scripted: list[tuple[float, Callable]] = []
+
+    # -- lane construction --------------------------------------------------
+
+    def _sub(self, tenant: Tenant, ep_idxs: Sequence[int]) -> Platform:
+        return subplatform(
+            self.platform, ep_idxs, f"{self.platform.name}/{tenant.name}"
+        )
+
+    def _build_lane(self, tenant: Tenant, ep_idxs: Sequence[int]) -> ServingSimulator:
+        sub = self._sub(tenant, ep_idxs)
+        ev = self.make_evaluator(sub, tenant.layers)
+        trace = Trace(ev)
+        sh = run_shisha(layer_weights(tenant.layers), trace, self.heuristic)
+        conf = sh.result.best_conf
+        policy = None
+        if self.batch_policy_search:
+            policy = tune_batch_policy(
+                trace,
+                conf,
+                tenant.slo,
+                batch_efficiency=self.batch_efficiency,
+                max_batch_cap=self.max_batch,
+            )
+        tuner = ContinuousShisha(
+            sub,
+            tenant.layers,
+            make_evaluator=lambda p, L=tenant.layers: self.make_evaluator(p, L),
+            slo=tenant.slo,
+            batch_policy_search=self.batch_policy_search,
+            max_batch_cap=self.max_batch,
+            batch_efficiency=self.batch_efficiency,
+            measure_batches=self.measure_batches,
+            alpha=self.alpha,
+        )
+        self._launch[tenant.name] = {
+            "conf_pretty": conf.pretty([ep.name for ep in sub.eps]),
+            "model_throughput": sh.result.best_throughput,
+            "n_trials": trace.n_trials,
+            "batch_policy": policy,
+        }
+        return ServingSimulator(
+            ev,
+            conf,
+            slo=tenant.slo,
+            max_batch=self.max_batch,
+            batch_efficiency=self.batch_efficiency,
+            batch_policy=policy,
+            monitor_interval=self.monitor_interval,
+            autotuner=tuner,
+            loop=self.loop,
+        )
+
+    # -- global fault script (global EP indices) ----------------------------
+
+    def schedule_slowdown(self, t: float, ep_idx: int, factor: float) -> None:
+        """At ``t`` global EP ``ep_idx`` derates; its owner lane sees it."""
+
+        def apply(sim: "SharedClockCoSimulator", now: float) -> None:
+            sim.global_drift[ep_idx] *= factor
+            owner = sim._serving_owner_of(ep_idx)
+            if owner is not None:
+                local = sim._installed[owner].index(ep_idx)
+                sim.lanes[owner].apply_slowdown(local, factor)
+
+        self._scripted.append((t, apply))
+
+    def schedule_dropout(self, t: float, ep_idx: int) -> None:
+        """At ``t`` global EP ``ep_idx`` dies; elastic mode re-partitions."""
+
+        def apply(sim: "SharedClockCoSimulator", now: float) -> None:
+            if ep_idx in sim.global_dead:
+                return
+            sim.global_dead.add(ep_idx)
+            # runtime effect lands on whoever is *serving* on the EP ...
+            serving = sim._serving_owner_of(ep_idx)
+            if serving is not None:
+                local = sim._installed[serving].index(ep_idx)
+                sim.lanes[serving].apply_dropout(local)
+            # ... while the allocation response follows ownership
+            if sim.elastic and sim._owner_of(ep_idx) is not None:
+                sim._unhandled_dead.append(ep_idx)
+            # non-elastic mode: the owner's own ContinuousShisha re-seeds
+            # within its (shrunken) partition at its next monitor tick
+
+        self._scripted.append((t, apply))
+
+    def _owner_of(self, ep_idx: int) -> str | None:
+        """Allocation truth: which tenant the EP is assigned to."""
+        for name, part in self.partitions.items():
+            if ep_idx in part:
+                return name
+        return None
+
+    def _serving_owner_of(self, ep_idx: int) -> str | None:
+        """Runtime truth: which lane's *installed* platform contains the EP."""
+        for name, part in self._installed.items():
+            if ep_idx in part:
+                return name
+        return None
+
+    # -- elastic re-partitioning --------------------------------------------
+
+    def _load(self, name: str, t: float) -> tuple[float, float]:
+        """(observed demand req/s, urgency req/s) for the pricing model.
+
+        Urgency is the service rate needed to clear the requests already
+        in the lane within one SLO window — the SLO pressure of the
+        backlog a fault (or an exploration stall) has built up.
+        """
+        lane = self.lanes[name]
+        tenant = next(x for x in self.tenants if x.name == name)
+        demand = lane._n_arrived / t if t > 0 else 0.0
+        in_system = sum(len(st.queue) for st in lane._stages) + sum(
+            len(st.batch or []) for st in lane._stages if st.busy
+        )
+        urgency = in_system / tenant.slo if tenant.slo > 0 else 0.0
+        return demand, urgency
+
+    def _repartition(self, t: float, dead_ep: int) -> None:
+        victim = self._owner_of(dead_ep)
+        if victim is None:  # already rebalanced away (duplicate dropout)
+            return
+        tenants = {x.name: x for x in self.tenants}
+        # dead EPs leave every partition: the invariant is that partitions
+        # stay disjoint and cover only alive EPs
+        self.partitions[victim] = tuple(
+            e for e in self.partitions[victim] if e != dead_ep
+        )
+        loads = {name: self._load(name, t) for name in self.partitions}
+        # price on what the hardware can do *now*: a derated EP must not be
+        # valued as if healthy, so the pricer sees the drift-adjusted
+        # platform (fresh per decision — its cache is drift-specific)
+        pricer = ElasticPartitioner(
+            drifted_platform(
+                self.platform, EPDerates(factors=tuple(self.global_drift))
+            ),
+            self.make_evaluator,
+            self.heuristic,
+            self.elastic_partitioner.headroom,
+        )
+        deal = pricer.rebalance(self.partitions, victim, tenants, loads)
+        donor = stolen = price = None
+        affected = [victim]
+        if deal is not None:
+            donor, stolen, price = deal
+            self.partitions[donor] = tuple(
+                e for e in self.partitions[donor] if e != stolen
+            )
+            self.partitions[victim] = self.partitions[victim] + (stolen,)
+            affected.append(donor)
+        retune_costs: dict[str, float] = {}
+        staged: list[tuple[str, object, Replatform, dict]] = []
+        for name in affected:
+            part = self.partitions[name]
+            if not part:
+                continue  # victim starved and nobody could donate
+            lane = self.lanes[name]
+            tenant = tenants[name]
+            sub = self._sub(tenant, part)
+            ldrift = EPDerates(
+                factors=tuple(self.global_drift[g] for g in part)
+            )
+            lane.autotuner.retarget(
+                sub, make_evaluator=lambda p, L=tenant.layers: self.make_evaluator(p, L)
+            )
+            retune = lane.autotuner.force_retune(
+                t, ldrift, frozenset(), kind="repartition"
+            )
+            replat = Replatform(
+                evaluator=self.make_evaluator(sub, tenant.layers),
+                drift=ldrift,
+                dead=frozenset(),
+            )
+            extra = {
+                "eps": list(part),
+                "gained": [stolen] if name == victim and stolen is not None else [],
+                "lost": [dead_ep] if name == victim else [stolen],
+                "explore_wall_s": retune.tuning_cost,
+            }
+            staged.append((name, retune, replat, extra))
+            retune_costs[name] = retune.tuning_cost
+        # the handover is atomic: every affected lane installs when the
+        # *slowest* exploration finishes, so a stolen EP is never part of
+        # two serving platforms at once (the donor keeps it exactly until
+        # the victim takes it over)
+        window = max((r.tuning_cost for _, r, _, _ in staged), default=0.0)
+        for name, retune, replat, extra in staged:
+            synced = dataclasses.replace(retune, tuning_cost=window)
+            self.lanes[name]._begin_reconfig(t, synced, replat, extra=extra)
+            # same timestamp + kind as the lane's install event but pushed
+            # after it, so the refresh runs once the new platform is live:
+            # it re-bases the installed mapping and overwrites the decision-
+            # time drift/dead snapshot with whatever faults landed during
+            # the exploration window
+            self.loop.push(
+                t + window,
+                _RECONFIG,
+                self,
+                lambda sim, now, n=name, p=self.partitions[name]: sim._finish_install(n, p),
+            )
+        self.repartitions.append(
+            RepartitionEvent(
+                t=t,
+                dead_ep=dead_ep,
+                victim=victim,
+                donor=donor,
+                stolen_ep=stolen,
+                price=price,
+                partitions={k: tuple(v) for k, v in self.partitions.items()},
+                retune_costs=retune_costs,
+            )
+        )
+
+    def _finish_install(self, name: str, part: tuple[int, ...]) -> None:
+        self._installed[name] = tuple(part)
+        lane = self.lanes[name]
+        lane.drift = EPDerates(
+            factors=tuple(self.global_drift[g] for g in part)
+        )
+        lane.dead = {i for i, g in enumerate(part) if g in self.global_dead}
+
+    # -- event handling ------------------------------------------------------
+
+    def _dispatch(self, t: float, kind: int, payload) -> None:
+        if kind in (_PLATFORM, _RECONFIG):
+            payload(self, t)
+        elif kind == _MONITOR:
+            self._on_monitor(t, payload)
+
+    def _on_monitor(self, t: float, horizon: float) -> None:
+        while self._unhandled_dead:
+            # any lane mid-exploration (or mid-install) defers the decision:
+            # a re-partition may touch any lane as donor, and overlapping
+            # reconfig windows would install stale configurations
+            if any(
+                lane._retuning_until > t or lane._stall_until > t
+                for lane in self.lanes.values()
+            ):
+                break
+            self._repartition(t, self._unhandled_dead.pop(0))
+        nxt = t + self.monitor_interval
+        if nxt < horizon:
+            self.loop.push(nxt, _MONITOR, self, horizon)
+
+    # -- main ---------------------------------------------------------------
+
+    def run(self, horizon: float) -> "CoServeResult":
+        # co-simulator monitor first: at equal tick times its re-partition
+        # decision must precede (and thereby suppress) lane-local re-tunes
+        if self.monitor_interval < horizon:
+            self.loop.push(self.monitor_interval, _MONITOR, self, horizon)
+        for t, fn in self._scripted:
+            self.loop.push(t, _PLATFORM, self, fn)
+        for idx, tenant in enumerate(self.tenants):
+            self.lanes[tenant.name].prime(
+                tenant.traffic.arrivals(horizon), horizon, tenant=idx
+            )
+        self.loop.run(horizon)
+        results = []
+        for tenant in self.tenants:
+            lane = self.lanes[tenant.name]
+            launch = self._launch[tenant.name]
+            results.append(
+                TenantResult(
+                    tenant=tenant,
+                    ep_idxs=self.partitions[tenant.name],
+                    conf_pretty=launch["conf_pretty"],
+                    model_throughput=launch["model_throughput"],
+                    n_trials=launch["n_trials"],
+                    sim=lane.result(horizon),
+                    batch_policy=launch["batch_policy"],
+                )
+            )
+        return CoServeResult(
+            results=results,
+            repartitions=self.repartitions,
+            partitions={k: tuple(v) for k, v in self.partitions.items()},
+            dead=frozenset(self.global_dead),
+        )
+
+
+@dataclasses.dataclass
+class CoServeResult:
+    """Everything a shared-clock co-simulation run produced."""
+
+    results: list[TenantResult]
+    repartitions: list[RepartitionEvent]
+    #: final global partitions (alive EPs only)
+    partitions: dict[str, tuple[int, ...]]
+    dead: frozenset
+
+    @property
+    def aggregate_slo_rate(self) -> float:
+        arrived = sum(r.sim.n_arrived for r in self.results)
+        viol = sum(r.sim.n_slo_violations for r in self.results)
+        return viol / arrived if arrived else 0.0
+
+    @property
+    def aggregate_throughput_rps(self) -> float:
+        return sum(r.sim.throughput_rps for r in self.results)
+
+
+def co_serve(
+    platform: Platform,
+    tenants: Sequence[Tenant],
+    *,
+    strategy: str = "interleaved",
+    horizon: float = 30.0,
+    make_evaluator: Callable[[Platform, Sequence[Layer]], AnalyticEvaluator] | None = None,
+    heuristic: str = "H3",
+    max_batch: int = 4,
+    batch_efficiency: float = 0.7,
+    elastic: bool = True,
+    batch_policy_search: bool = False,
+    monitor_interval: float = 0.5,
+    measure_batches: int = 8,
+    alpha: int = 10,
+    faults: Sequence[tuple] | None = None,
+) -> CoServeResult:
+    """Partition, tune and co-serve all tenants on one shared clock.
+
+    ``faults`` is a script of ``("slowdown", t, global_ep, factor)`` and
+    ``("dropout", t, global_ep)`` entries applied to the global platform.
+    """
+    co = SharedClockCoSimulator(
+        platform,
+        tenants,
+        strategy=strategy,
+        make_evaluator=make_evaluator,
+        heuristic=heuristic,
+        max_batch=max_batch,
+        batch_efficiency=batch_efficiency,
+        elastic=elastic,
+        batch_policy_search=batch_policy_search,
+        monitor_interval=monitor_interval,
+        measure_batches=measure_batches,
+        alpha=alpha,
+    )
+    for fault in faults or ():
+        if fault[0] == "slowdown":
+            co.schedule_slowdown(fault[1], fault[2], fault[3])
+        elif fault[0] == "dropout":
+            co.schedule_dropout(fault[1], fault[2])
+        else:
+            raise ValueError(f"unknown fault kind {fault[0]!r}")
+    return co.run(horizon)
 
 
 def co_schedule(
@@ -115,38 +703,25 @@ def co_schedule(
     max_batch: int = 4,
     batch_efficiency: float = 0.7,
 ) -> list[TenantResult]:
-    """Partition, tune each tenant with Shisha, and simulate its traffic."""
-    if make_evaluator is None:
-        make_evaluator = lambda p, layers: DatabaseEvaluator(p, layers)
-    parts = partition_eps(
-        platform, len(tenants), strategy, shares=[t.share for t in tenants]
-    )
-    results: list[TenantResult] = []
-    for idx, (tenant, ep_idxs) in enumerate(zip(tenants, parts)):
-        sub = subplatform(platform, ep_idxs, f"{platform.name}/{tenant.name}")
-        ev = make_evaluator(sub, tenant.layers)
-        trace = Trace(ev)
-        sh = run_shisha(layer_weights(tenant.layers), trace, heuristic)
-        conf = sh.result.best_conf
-        sim = ServingSimulator(
-            ev,
-            conf,
-            slo=tenant.slo,
-            max_batch=max_batch,
-            batch_efficiency=batch_efficiency,
-        )
-        res = sim.run(tenant.traffic.arrivals(horizon), horizon, tenant=idx)
-        results.append(
-            TenantResult(
-                tenant=tenant,
-                ep_idxs=ep_idxs,
-                conf_pretty=conf.pretty([ep.name for ep in sub.eps]),
-                model_throughput=sh.result.best_throughput,
-                n_trials=trace.n_trials,
-                sim=res,
-            )
-        )
-    return results
+    """Partition, tune each tenant with Shisha, and co-simulate its traffic.
+
+    Fault-free, fixed-partition wrapper over :func:`co_serve` — with no
+    faults and no elasticity the shared clock reproduces the per-tenant
+    independent simulations exactly (disjoint partitions have no other
+    interference channel), so this keeps its original contract.
+    """
+    return co_serve(
+        platform,
+        tenants,
+        strategy=strategy,
+        horizon=horizon,
+        make_evaluator=make_evaluator,
+        heuristic=heuristic,
+        max_batch=max_batch,
+        batch_efficiency=batch_efficiency,
+        elastic=False,
+        batch_policy_search=False,
+    ).results
 
 
 def compare_partitions(

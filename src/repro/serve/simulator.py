@@ -54,6 +54,34 @@ from ..pipeline.hetero import EPDerates
 _ARRIVAL, _DONE, _PLATFORM, _MONITOR, _RECONFIG = range(5)
 
 
+class EventLoop:
+    """One discrete-event heap, shareable by several pipelines.
+
+    Every event carries its *owner* (the pipeline — or co-simulator — whose
+    ``_dispatch`` handles it), so N tenants can advance on one clock: this
+    is what makes the multi-tenant simulation a true co-simulation rather
+    than N independent replays.  The monotonically increasing sequence
+    number both breaks timestamp ties deterministically (push order) and
+    guarantees owners are never compared by ``heapq``.
+    """
+
+    def __init__(self):
+        self._heap: list = []
+        self._seq = 0
+
+    def push(self, t: float, kind: int, owner, payload) -> None:
+        self._seq += 1
+        heapq.heappush(self._heap, (t, kind, self._seq, owner, payload))
+
+    def run(self, horizon: float) -> None:
+        """Dispatch events in (time, kind, push-order) order up to horizon."""
+        while self._heap:
+            t, kind, _seq, owner, payload = heapq.heappop(self._heap)
+            if t > horizon:
+                break
+            owner._dispatch(t, kind, payload)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -148,6 +176,8 @@ class ServingSimulator:
         slo: float = 1.0,
         monitor_interval: float = 0.5,
         autotuner=None,
+        batch_policy: Sequence[int] | None = None,
+        loop: EventLoop | None = None,
     ):
         self.evaluator = evaluator
         self.conf = conf
@@ -156,66 +186,79 @@ class ServingSimulator:
         self.slo = slo
         self.monitor_interval = monitor_interval
         self.autotuner = autotuner
+        #: per-stage max micro-batch; defaults to a flat ``max_batch``
+        self.batch_policy = self._policy(batch_policy, conf.depth)
+        #: the event heap — private by default, shared under co-simulation
+        self.loop = loop if loop is not None else EventLoop()
 
         n_eps = evaluator.platform.n_eps
         self.drift = EPDerates(factors=(1.0,) * n_eps)
         self.dead: set[int] = set()
         self._base_times = list(evaluator.stage_times(conf))
         self._stages = [_Stage(queue=deque()) for _ in range(conf.depth)]
-        self._heap: list = []
-        self._seq = 0
         self._stall_until = -math.inf
         self._retuning_until = -math.inf
         self._epoch = 0  # bumped per reconfig; invalidates pre-reconfig _DONEs
         self._busy_time = [0.0] * n_eps
+        #: occupancy folded in from platforms served before a re-partition,
+        #: keyed by EP name (names are global, indices are not)
+        self._busy_prev: dict[str, float] = {}
         self._completed: list[Request] = []
         self._n_arrived = 0
         self._reconfigs: list[dict] = []
         self._load_samples: list[tuple[float, int]] = []
         self._scripted: list[tuple[float, Callable]] = []
 
+    def _policy(self, policy: Sequence[int] | None, depth: int) -> tuple[int, ...]:
+        if policy is None:
+            return (self.max_batch,) * depth
+        if len(policy) != depth or any(b < 1 for b in policy):
+            raise ValueError(f"need {depth} positive batch caps, got {policy}")
+        return tuple(policy)
+
     # -- scenario scripting -------------------------------------------------
 
     def schedule_slowdown(self, t: float, ep_idx: int, factor: float) -> None:
         """At time ``t`` the EP becomes ``factor``x slower (drift derate)."""
-
-        def apply(sim: "ServingSimulator", now: float) -> None:
-            f = list(sim.drift.factors)
-            f[ep_idx] = f[ep_idx] * factor
-            sim.drift = EPDerates(factors=tuple(f))
-
-        self._scripted.append((t, apply))
+        self._scripted.append(
+            (t, lambda sim, now: sim.apply_slowdown(ep_idx, factor))
+        )
 
     def schedule_dropout(self, t: float, ep_idx: int) -> None:
         """At time ``t`` the EP dies: its stage blocks, in-flight work is lost."""
-
-        def apply(sim: "ServingSimulator", now: float) -> None:
-            sim.dead.add(ep_idx)
-            for s, st in enumerate(sim._stages):
-                if sim.conf.eps[s] == ep_idx and st.busy:
-                    st.token += 1  # cancel the in-flight completion
-                    st.busy = False
-                    st.queue.extendleft(reversed(st.batch or []))
-                    st.batch = None
-
-        self._scripted.append((t, apply))
+        self._scripted.append((t, lambda sim, now: sim.apply_dropout(ep_idx)))
 
     def schedule_revival(self, t: float, ep_idx: int) -> None:
         """At time ``t`` a dead EP comes back; its stages may serve again."""
+        self._scripted.append((t, lambda sim, now: sim.apply_revival(ep_idx, now)))
 
-        def apply(sim: "ServingSimulator", now: float) -> None:
-            sim.dead.discard(ep_idx)
-            for s in range(sim.conf.depth):
-                if sim.conf.eps[s] == ep_idx:
-                    sim._try_start(s, now)
+    # fault effects are methods (not closures) so a co-simulator can apply
+    # *global* fault scripts to whichever tenant owns the EP at fault time
 
-        self._scripted.append((t, apply))
+    def apply_slowdown(self, ep_idx: int, factor: float) -> None:
+        f = list(self.drift.factors)
+        f[ep_idx] = f[ep_idx] * factor
+        self.drift = EPDerates(factors=tuple(f))
+
+    def apply_dropout(self, ep_idx: int) -> None:
+        self.dead.add(ep_idx)
+        for s, st in enumerate(self._stages):
+            if self.conf.eps[s] == ep_idx and st.busy:
+                st.token += 1  # cancel the in-flight completion
+                st.busy = False
+                st.queue.extendleft(reversed(st.batch or []))
+                st.batch = None
+
+    def apply_revival(self, ep_idx: int, now: float) -> None:
+        self.dead.discard(ep_idx)
+        for s in range(self.conf.depth):
+            if self.conf.eps[s] == ep_idx:
+                self._try_start(s, now)
 
     # -- internals ----------------------------------------------------------
 
     def _push(self, t: float, kind: int, payload) -> None:
-        self._seq += 1
-        heapq.heappush(self._heap, (t, kind, self._seq, payload))
+        self.loop.push(t, kind, self, payload)
 
     def _effective_time(self, stage: int) -> float:
         return self.drift.scale(self.conf.eps[stage], self._base_times[stage])
@@ -232,7 +275,7 @@ class ServingSimulator:
         ep = self.conf.eps[stage]
         if st.busy or not st.queue or t < self._stall_until or ep in self.dead:
             return
-        b = min(len(st.queue), self.max_batch)
+        b = min(len(st.queue), self.batch_policy[stage])
         batch = [st.queue.popleft() for _ in range(b)]
         dt = self._effective_time(stage) * (1.0 + (b - 1) * self.batch_efficiency)
         for r in batch:
@@ -259,7 +302,7 @@ class ServingSimulator:
             self._try_start(stage + 1, t)
         self._try_start(stage, t)
 
-    def _begin_reconfig(self, t: float, retune) -> None:
+    def _begin_reconfig(self, t: float, retune, replatform: "Replatform | None" = None, extra: dict | None = None) -> None:
         # The old configuration keeps serving during the exploration window
         # (measurement batches are real traffic); the new conf lands at its
         # end and only then does the install downtime stall admission.
@@ -272,9 +315,19 @@ class ServingSimulator:
             "new_depth": retune.conf.depth,
             "model_throughput": retune.model_throughput,
         }
-        self._push(self._retuning_until, _RECONFIG, (retune, entry))
+        if retune.batch_policy is not None:
+            entry["batch_policy"] = list(retune.batch_policy)
+        if extra:
+            entry.update(extra)
+        self._push(self._retuning_until, _RECONFIG, (retune, entry, replatform))
 
-    def _apply_reconfig(self, t: float, retune, entry: dict) -> None:
+    def _fold_busy_time(self) -> None:
+        """Accumulate current-platform occupancy into the name-keyed ledger."""
+        for i, ep in enumerate(self.evaluator.platform.eps):
+            if self._busy_time[i]:
+                self._busy_prev[ep.name] = self._busy_prev.get(ep.name, 0.0) + self._busy_time[i]
+
+    def _apply_reconfig(self, t: float, retune, entry: dict, replatform: "Replatform | None" = None) -> None:
         # logged here, not at decision time: a re-tune whose exploration
         # window runs past the horizon never installs and is not reported
         self._reconfigs.append(entry)
@@ -287,7 +340,26 @@ class ServingSimulator:
             displaced.extend(st.queue)
         displaced.sort(key=lambda r: (r.t_arrival, r.rid))
         self._epoch += 1  # outstanding _DONE events of the old conf are void
+        if replatform is not None:
+            # elastic re-partition: the EP set itself changed, so swap the
+            # ground-truth evaluator and re-base drift/dead/occupancy to the
+            # new local index space
+            self._fold_busy_time()
+            self.evaluator = replatform.evaluator
+            self.drift = replatform.drift
+            self.dead = set(replatform.dead)
+            self._busy_time = [0.0] * self.evaluator.platform.n_eps
+        old_policy = self.batch_policy
         self.conf = retune.conf
+        if retune.batch_policy is not None:
+            policy = retune.batch_policy
+        elif len(old_policy) == self.conf.depth:
+            # no knob search ran: keep the caps currently in force rather
+            # than silently resetting a caller-supplied per-stage policy
+            policy = old_policy
+        else:
+            policy = None  # depth changed and nothing better known: flat default
+        self.batch_policy = self._policy(policy, self.conf.depth)
         self._base_times = list(self.evaluator.stage_times(self.conf))
         self._stages = [_Stage(queue=deque()) for _ in range(self.conf.depth)]
         self._stages[0].queue.extend(displaced)
@@ -311,7 +383,8 @@ class ServingSimulator:
 
     # -- main loop ----------------------------------------------------------
 
-    def run(self, arrival_times: Sequence[float], horizon: float, tenant: int = 0) -> SimResult:
+    def prime(self, arrival_times: Sequence[float], horizon: float, tenant: int = 0) -> None:
+        """Enqueue arrivals, scripted faults and the first monitor tick."""
         for rid, ta in enumerate(arrival_times):
             self._push(ta, _ARRIVAL, Request(rid=rid, t_arrival=ta, tenant=tenant))
         for t, fn in self._scripted:
@@ -319,22 +392,24 @@ class ServingSimulator:
         if self.monitor_interval < horizon:
             self._push(self.monitor_interval, _MONITOR, horizon)
 
-        while self._heap:
-            t, kind, _seq, payload = heapq.heappop(self._heap)
-            if t > horizon:
-                break
-            if kind == _ARRIVAL:
-                self._n_arrived += 1
-                self._stages[0].queue.append(payload)
-                self._try_start(0, t)
-            elif kind == _DONE:
-                self._on_done(t, *payload)
-            elif kind == _PLATFORM:
-                payload(self, t)
-            elif kind == _MONITOR:
-                self._on_monitor(t, payload)
-            elif kind == _RECONFIG:
-                self._apply_reconfig(t, *payload)
+    def _dispatch(self, t: float, kind: int, payload) -> None:
+        """Handle one event; called by whichever loop owns the clock."""
+        if kind == _ARRIVAL:
+            self._n_arrived += 1
+            self._stages[0].queue.append(payload)
+            self._try_start(0, t)
+        elif kind == _DONE:
+            self._on_done(t, *payload)
+        elif kind == _PLATFORM:
+            payload(self, t)
+        elif kind == _MONITOR:
+            self._on_monitor(t, payload)
+        elif kind == _RECONFIG:
+            self._apply_reconfig(t, *payload)
+
+    def run(self, arrival_times: Sequence[float], horizon: float, tenant: int = 0) -> SimResult:
+        self.prime(arrival_times, horizon, tenant)
+        self.loop.run(horizon)
         return self._result(horizon)
 
     def _result(self, horizon: float) -> SimResult:
@@ -349,7 +424,9 @@ class ServingSimulator:
         n_viol = sum(1 for l in lats if l > self.slo) + sum(
             1 for r in pending if horizon - r.t_arrival > self.slo
         )
-        eps = self.evaluator.platform.eps
+        occ = {name: busy / horizon for name, busy in self._busy_prev.items()}
+        for i, ep in enumerate(self.evaluator.platform.eps):
+            occ[ep.name] = occ.get(ep.name, 0.0) + self._busy_time[i] / horizon
         return SimResult(
             horizon=horizon,
             slo=self.slo,
@@ -365,7 +442,25 @@ class ServingSimulator:
             p95_wait=percentile(sorted(r.t_start - r.t_arrival for r in self._completed), 0.95),
             n_slo_violations=n_viol,
             slo_rate=n_viol / self._n_arrived if self._n_arrived else 0.0,
-            occupancy={ep.name: self._busy_time[i] / horizon for i, ep in enumerate(eps)},
+            occupancy=occ,
             reconfigs=self._reconfigs,
             load_samples=self._load_samples,
         )
+
+    def result(self, horizon: float) -> SimResult:
+        """Final accounting; used by co-simulators that drive a shared loop."""
+        return self._result(horizon)
+
+
+@dataclasses.dataclass(frozen=True)
+class Replatform:
+    """Install bundle for a re-partition: the lane's new ground truth.
+
+    Carried alongside a :class:`~repro.serve.autotuner.Retune` through the
+    reconfig event so the evaluator/drift/dead swap happens at *install*
+    time (end of the exploration window), not at decision time.
+    """
+
+    evaluator: AnalyticEvaluator
+    drift: EPDerates
+    dead: frozenset

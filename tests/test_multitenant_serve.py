@@ -1,0 +1,247 @@
+"""Shared-clock elastic multi-tenant co-simulation: invariants + behaviour.
+
+The elastic co-simulator moves EPs between tenants mid-flight, which makes
+two invariants worth guarding hard:
+
+  * partition sanity — after *every* re-partition the tenants' EP sets are
+    pairwise disjoint and together cover exactly the alive EPs;
+  * conservation — every request that arrived is accounted for at the
+    horizon (completed, in flight, or queued), summed over all tenants,
+    even across drain-and-restart re-tunes and evaluator swaps.
+"""
+
+import pytest
+
+from repro.core import DatabaseEvaluator, Trace, paper_platform, weights
+from repro.core.heuristics import run_shisha
+from repro.models.cnn import network_layers
+from repro.serve import (
+    ElasticPartitioner,
+    MMPPTraffic,
+    PoissonTraffic,
+    ReplayTraffic,
+    Tenant,
+    co_schedule,
+    co_serve,
+    partition_eps,
+    subplatform,
+)
+
+HORIZON = 150.0
+FAULT_T = HORIZON / 3.0
+
+
+@pytest.fixture(scope="module")
+def plat():
+    return paper_platform(8)
+
+
+@pytest.fixture(scope="module")
+def tenants(plat):
+    """Victim at 65% of its partition capacity, donor deeply headroomed.
+
+    Traffic is recorded so every test (and both arms of any comparison)
+    replays the identical request stream.
+    """
+    parts = partition_eps(plat, 2, "interleaved")
+    caps = {}
+    layer_sets = {}
+    for name, part in zip(("synthnet", "resnet50"), parts):
+        layers = network_layers(name)
+        ev = DatabaseEvaluator(subplatform(plat, part, name), layers)
+        caps[name] = run_shisha(weights(layers), Trace(ev), "H3").result.best_throughput
+        layer_sets[name] = layers
+    return [
+        Tenant(
+            name="synthnet",
+            layers=tuple(layer_sets["synthnet"]),
+            traffic=ReplayTraffic.record(
+                PoissonTraffic(rate=0.65 * caps["synthnet"], seed=11), HORIZON
+            ),
+            slo=2.7,
+        ),
+        Tenant(
+            name="resnet50",
+            layers=tuple(layer_sets["resnet50"]),
+            traffic=ReplayTraffic.record(
+                MMPPTraffic(
+                    rate_low=0.08 * caps["resnet50"],
+                    rate_high=0.30 * caps["resnet50"],
+                    seed=12,
+                ),
+                HORIZON,
+            ),
+            slo=0.8,
+        ),
+    ]
+
+
+def _co_serve(plat, tenants, *, elastic, faults=()):
+    return co_serve(
+        plat,
+        tenants,
+        horizon=HORIZON,
+        elastic=elastic,
+        batch_policy_search=True,
+        measure_batches=2,
+        alpha=4,
+        faults=list(faults),
+    )
+
+
+# ---------------------------------------------------------------------------
+# invariants
+# ---------------------------------------------------------------------------
+
+
+def test_partitions_disjoint_and_cover_alive_after_every_repartition(plat, tenants):
+    res = _co_serve(plat, tenants, elastic=True, faults=[("dropout", FAULT_T, 0)])
+    assert res.repartitions, "the dropout must trigger at least one re-partition"
+    dead_so_far: set[int] = set()
+    for event in res.repartitions:
+        dead_so_far.add(event.dead_ep)
+        owned = [ep for part in event.partitions.values() for ep in part]
+        assert len(owned) == len(set(owned)), f"overlap at t={event.t}: {event.partitions}"
+        assert set(owned) == set(range(plat.n_eps)) - dead_so_far, (
+            f"partitions at t={event.t} do not cover exactly the alive EPs"
+        )
+    # the final partitions agree with the last event's snapshot
+    assert res.partitions == res.repartitions[-1].partitions
+    assert res.dead == frozenset(dead_so_far)
+
+
+def test_global_queue_conservation_at_horizon(plat, tenants):
+    for elastic in (False, True):
+        res = _co_serve(plat, tenants, elastic=elastic, faults=[("dropout", FAULT_T, 0)])
+        for r in res.results:
+            assert (
+                r.sim.n_arrived
+                == r.sim.n_completed + r.sim.n_in_flight + r.sim.n_queued
+            ), f"{r.tenant.name} leaked requests (elastic={elastic})"
+        total_arrived = sum(r.sim.n_arrived for r in res.results)
+        total_accounted = sum(
+            r.sim.n_completed + r.sim.n_in_flight + r.sim.n_queued
+            for r in res.results
+        )
+        assert total_arrived == total_accounted
+        # every tenant's traffic actually arrived
+        assert total_arrived == sum(
+            len(t.traffic.arrivals(HORIZON)) for t in tenants
+        )
+
+
+def test_no_ep_oversubscription_across_tenants(plat, tenants):
+    """The handover is atomic: a stolen EP is never part of two serving
+    platforms at once, so no EP's occupancy summed over tenants can top 1."""
+    res = _co_serve(plat, tenants, elastic=True, faults=[("dropout", FAULT_T, 0)])
+    assert res.repartitions
+    total: dict[str, float] = {}
+    for r in res.results:
+        for name, occ in r.sim.occupancy.items():
+            total[name] = total.get(name, 0.0) + occ
+    assert all(v <= 1.0 + 1e-9 for v in total.values()), total
+
+
+# ---------------------------------------------------------------------------
+# behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_co_serve_is_deterministic(plat, tenants):
+    runs = [
+        _co_serve(plat, tenants, elastic=True, faults=[("dropout", FAULT_T, 0)])
+        for _ in range(2)
+    ]
+    assert runs[0].partitions == runs[1].partitions
+    assert len(runs[0].repartitions) == len(runs[1].repartitions)
+    for a, b in zip(runs[0].results, runs[1].results):
+        assert a.sim.latencies == b.sim.latencies
+        assert a.sim.reconfigs == b.sim.reconfigs
+
+
+def test_elastic_beats_static_under_fep_dropout(plat, tenants):
+    """Acceptance: same fault, same replayed traffic -> elastic wins on
+    aggregate SLO violations, and the events carry their Trace.wall costs."""
+    faults = [("dropout", FAULT_T, 0)]
+    static = _co_serve(plat, tenants, elastic=False, faults=faults)
+    elastic = _co_serve(plat, tenants, elastic=True, faults=faults)
+    assert elastic.aggregate_slo_rate < static.aggregate_slo_rate
+    assert static.repartitions == []
+    assert len(elastic.repartitions) == 1
+    event = elastic.repartitions[0]
+    assert event.victim == "synthnet"
+    assert event.stolen_ep is not None and event.donor == "resnet50"
+    # both affected tenants were charged real exploration time
+    assert set(event.retune_costs) == {"synthnet", "resnet50"}
+    assert all(c > 0 for c in event.retune_costs.values())
+
+
+def test_fault_during_exploration_window_survives_install(plat, tenants):
+    """A slowdown landing *inside* a re-partition's exploration window must
+    hit the lane still serving that EP and survive the install: the
+    install-time refresh re-bases the lane's drift from the global state,
+    so the lingering derate triggers a follow-up slowdown re-tune."""
+    res = _co_serve(
+        plat,
+        tenants,
+        elastic=True,
+        faults=[("dropout", FAULT_T, 0), ("slowdown", FAULT_T + 5.0, 2, 3.0)],
+    )
+    assert len(res.repartitions) == 1
+    syn = next(r for r in res.results if r.tenant.name == "synthnet")
+    assert syn.sim.n_arrived == (
+        syn.sim.n_completed + syn.sim.n_in_flight + syn.sim.n_queued
+    )
+    kinds = [rc["kind"] for rc in syn.sim.reconfigs]
+    assert "repartition" in kinds
+    assert "slowdown" in kinds, f"post-install drift was lost: {kinds}"
+
+
+def test_global_slowdown_lands_on_owner_lane(plat, tenants):
+    """A scripted global slowdown must reach the tenant owning that EP."""
+    res = _co_serve(plat, tenants, elastic=True, faults=[("slowdown", FAULT_T, 1, 3.0)])
+    # global EP 1 belongs to resnet50 under the interleaved split
+    r50 = next(r for r in res.results if r.tenant.name == "resnet50")
+    syn = next(r for r in res.results if r.tenant.name == "synthnet")
+    assert any(rc["kind"] == "slowdown" for rc in r50.sim.reconfigs)
+    assert syn.sim.reconfigs == []
+    assert res.repartitions == []  # slowdowns do not re-partition
+
+
+def test_co_schedule_keeps_fixed_partitions(plat, tenants):
+    rows = co_schedule(plat, tenants, horizon=60.0)
+    parts = partition_eps(plat, 2, "interleaved")
+    for row, part in zip(rows, parts):
+        assert row.ep_idxs == tuple(part)
+        assert row.sim.n_arrived == (
+            row.sim.n_completed + row.sim.n_in_flight + row.sim.n_queued
+        )
+
+
+# ---------------------------------------------------------------------------
+# pricing unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_partitioner_prices_headroomed_donor_near_zero(plat, tenants):
+    ep = ElasticPartitioner(plat, lambda p, L: DatabaseEvaluator(p, L))
+    donor = tenants[1]  # resnet50, huge capacity
+    part = (1, 3, 5, 7)
+    # demand far below capacity: giving up even a fast EP risks nothing
+    assert ep.price(donor, part, 3, demand=1.0, urgency=0.0) == 0.0
+    # demand near capacity: the same EP becomes expensive
+    cap = ep.tuned_throughput(donor, part)
+    assert ep.price(donor, part, 3, demand=cap, urgency=0.0) > 0.0
+
+
+def test_partitioner_ignores_useless_ep_for_victim(plat, tenants):
+    ep = ElasticPartitioner(plat, lambda p, L: DatabaseEvaluator(p, L))
+    victim = tenants[0]  # synthnet
+    part = (2, 4, 6)
+    cap = ep.tuned_throughput(victim, part)
+    # a slow EP does not move synthnet's bottleneck: zero gain even under
+    # heavy pressure
+    slow_gain = ep.gain(victim, part, 7, demand=2 * cap, urgency=5.0)
+    fast_gain = ep.gain(victim, part, 1, demand=2 * cap, urgency=5.0)
+    assert slow_gain == 0.0
+    assert fast_gain > 0.0

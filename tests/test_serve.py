@@ -10,6 +10,7 @@ from repro.models.cnn import network_layers
 from repro.serve import (
     ContinuousShisha,
     DiurnalTraffic,
+    DriftDetector,
     MMPPTraffic,
     PoissonTraffic,
     ReplayTraffic,
@@ -19,6 +20,7 @@ from repro.serve import (
     percentile,
     slo_violation_rate,
     subplatform,
+    tune_batch_policy,
 )
 from repro.pipeline.hetero import EPDerates
 
@@ -282,6 +284,84 @@ def test_retuned_conf_avoids_dead_ep(tuned):
     assert retune.conf.n_layers == len(tuned["layers"])
 
 
+def test_drift_detector_tolerates_short_factors_tuple(tuned):
+    """Regression: a factors tuple shorter than the platform's EP count must
+    not raise IndexError — missing entries mean 'no derate observed', the
+    same contract drifted_platform already honours."""
+    det = DriftDetector()
+    conf = tuned["conf"]  # references EP indices well past 0
+    short = EPDerates(factors=(1.0,))
+    assert det.detect(conf, [0.1] * conf.depth, short, frozenset()) is None
+    # a derate that *is* covered still fires
+    short_hot = EPDerates(factors=(3.0,))
+    if 0 in conf.eps:
+        drift = det.detect(conf, [0.1] * conf.depth, short_hot, frozenset())
+        assert drift is not None and drift.kind == "slowdown"
+
+
+def test_retune_carries_batch_policy_when_enabled(tuned):
+    tuner = ContinuousShisha(
+        tuned["plat"],
+        tuned["layers"],
+        make_evaluator=lambda p: DatabaseEvaluator(p, tuned["layers"]),
+        slo=_slo(tuned),
+        batch_policy_search=True,
+    )
+    drift = EPDerates(factors=(1.0,) * tuned["plat"].n_eps)
+    dead = frozenset({tuned["conf"].eps[0]})
+    observed = [
+        math.inf if tuned["conf"].eps[s] in dead else 0.1
+        for s in range(tuned["conf"].depth)
+    ]
+    retune = tuner.observe(1.0, tuned["conf"], observed, drift, dead)
+    assert retune is not None
+    assert retune.batch_policy is not None
+    assert len(retune.batch_policy) == retune.conf.depth
+    assert all(b >= 1 for b in retune.batch_policy)
+
+
+def test_tune_batch_policy_charges_trace_and_respects_slo(tuned):
+    trace = Trace(tuned["ev"])
+    w0 = trace.wall
+    policy = tune_batch_policy(trace, tuned["conf"], slo=100.0, max_batch_cap=8)
+    assert len(policy) == tuned["conf"].depth
+    # a wide-open SLO lets every stage amortise up to the cap, and the knob
+    # exploration is charged to the trace like any Algorithm 2 move
+    assert policy == (8,) * tuned["conf"].depth
+    assert trace.wall > w0
+    # an impossible SLO admits no batching and charges nothing
+    free = Trace(tuned["ev"])
+    assert tune_batch_policy(free, tuned["conf"], slo=1e-9) == (1,) * tuned["conf"].depth
+    assert free.wall == 0.0
+
+
+def test_per_stage_batch_policy_drives_simulator(tuned):
+    # 2x overload keeps queues full, so the amortised batch beat (efficiency
+    # < 1 => b requests in less than b beats) must raise completions
+    traffic = PoissonTraffic(rate=2.0 * tuned["cap"], seed=5)
+    flat = ServingSimulator(tuned["ev"], tuned["conf"], slo=_slo(tuned), max_batch=1)
+    res_flat = flat.run(traffic.arrivals(40.0), 40.0)
+    boosted = ServingSimulator(
+        tuned["ev"],
+        tuned["conf"],
+        slo=_slo(tuned),
+        max_batch=1,  # overridden per stage below
+        batch_policy=(4,) * tuned["conf"].depth,
+    )
+    res_boost = boosted.run(traffic.arrivals(40.0), 40.0)
+    assert res_boost.n_completed > res_flat.n_completed
+    # a per-stage policy of all-1 is exactly the unbatched simulator
+    single = ServingSimulator(
+        tuned["ev"],
+        tuned["conf"],
+        slo=_slo(tuned),
+        max_batch=4,
+        batch_policy=(1,) * tuned["conf"].depth,
+    )
+    res_single = single.run(traffic.arrivals(40.0), 40.0)
+    assert res_single.latencies == res_flat.latencies
+
+
 def test_drifted_platform_model(tuned):
     plat = tuned["plat"]
     f = [1.0] * plat.n_eps
@@ -325,3 +405,15 @@ def test_subplatform_reindexes():
     assert sub.n_eps == 2
     assert sub.eps[0].name == plat.eps[6].name
     assert sub.eps[1].name == plat.eps[1].name
+
+
+def test_blocked_partition_skewed_shares_keeps_all_tenants():
+    """Regression: heavily skewed shares must rebalance, not starve a tenant."""
+    plat = paper_platform(8)
+    for shares in ([1000.0, 1.0, 1.0], [1e6, 1e-6], [0.001, 5.0, 0.001, 5.0]):
+        parts = partition_eps(plat, len(shares), "blocked", shares=shares)
+        assert sorted(ep for p in parts for ep in p) == list(range(8))
+        assert all(len(p) >= 1 for p in parts)
+    # the dominant share still gets the biggest block
+    parts = partition_eps(plat, 3, "blocked", shares=[1000.0, 1.0, 1.0])
+    assert len(parts[0]) > len(parts[1])
