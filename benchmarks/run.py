@@ -20,7 +20,7 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import fig4_convergence, fig5_quality, fig6_seed, fig7_heuristics, fig9_latency
-    from . import kernels_bench, roofline, serve_sim
+    from . import fig9_interconnect, kernels_bench, roofline, serve_sim
 
     figures = {
         "fig4": fig4_convergence.run,
@@ -28,6 +28,7 @@ def main() -> None:
         "fig6": fig6_seed.run,
         "fig7": fig7_heuristics.run,
         "fig9": fig9_latency.run,
+        "fig9_interconnect": lambda: fig9_interconnect.run(quick=args.quick),
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "serve_sim": lambda: serve_sim.run(quick=args.quick),

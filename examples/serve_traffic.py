@@ -99,8 +99,12 @@ out = co_serve(
 for r in out.results:
     print(f"[multi] {r.tenant.name:9s} eps={list(r.ep_idxs)} {r.sim.summary()}")
 for e in out.repartitions:
-    print(
-        f"[elast] t={e.t:.1f}s EP{e.dead_ep} died; {e.victim} stole "
-        f"EP{e.stolen_ep} from {e.donor} (price {e.price:.2f} req/s at risk); "
-        f"re-tune costs " + ", ".join(f"{k}={v:.1f}s" for k, v in e.retune_costs.items())
-    )
+    costs = ", ".join(f"{k}={v:.1f}s" for k, v in e.retune_costs.items())
+    if e.kind == "revival":
+        deal = f"EP{e.stolen_ep} revived and was granted to {e.victim}"
+    elif e.stolen_ep is None:
+        deal = f"EP{e.dead_ep} died; no donor could spare an EP for {e.victim}"
+    else:
+        price = "unpriced" if e.price is None else f"price {e.price:.2f} req/s at risk"
+        deal = f"EP{e.dead_ep} died; {e.victim} stole EP{e.stolen_ep} from {e.donor} ({price})"
+    print(f"[elast] t={e.t:.1f}s {deal}; re-tune costs {costs}")

@@ -8,7 +8,13 @@ oracle is therefore pluggable here:
         t_layer = max(flops / EP.flops, bytes / EP.mem_bw)
     plus inter-stage transfer time over the EP link (bandwidth + latency,
     the Fig. 9 knob).  Throughput = 1 / max_stage_time (steady-state
-    pipeline, one inference unit per beat).
+    pipeline, one inference unit per beat).  When the platform carries an
+    interconnect fabric (:class:`~repro.interconnect.Fabric`), each
+    stage-boundary transfer is *routed* and priced under the steady-state
+    flow set — all of the schedule's boundary transfers plus any
+    ``background_flows`` a serving layer injects — so shared links fair-share
+    their bandwidth (the graph form of the paper's §6 shared-memory-
+    controller effect, and the Fig. 9 latency knob becomes per-hop).
 
   * :class:`DatabaseEvaluator` — mimics the paper's gem5 database: per
     (layer, EP-type) times are precomputed once with deterministic
@@ -56,25 +62,53 @@ class AnalyticEvaluator:
     layers: Sequence[Layer]
     #: per-layer fixed overhead on the EP (kernel-launch / queue pop), s
     layer_overhead: float = 2e-6
+    #: co-tenant flows priced into every transfer when the platform has a
+    #: fabric (node-space :class:`~repro.interconnect.Flow`s injected by the
+    #: serving layer); ignored on scalar-link platforms
+    background_flows: tuple = ()
 
     def layer_time(self, layer: Layer, ep_idx: int) -> float:
         ep = self.platform.eps[ep_idx]
         return max(layer.flops / ep.flops, layer.bytes_mem / ep.mem_bw) + self.layer_overhead
 
-    def stage_times(self, conf: PipelineConfig) -> list[float]:
-        times = []
+    def transfer_times(self, conf: PipelineConfig) -> list[float]:
+        """Inter-stage transfer time per stage boundary (s -> s+1).
+
+        Scalar path: the output activations of the stage's last layer cross
+        one link priced by the two EPs' specs.  Fabric path: every boundary
+        transfer of the steady-state pipeline (plus ``background_flows``) is
+        routed and priced under shared-link contention.
+        """
+        n_links = conf.depth - 1
+        if n_links <= 0:
+            return []
         bounds = conf.boundaries()
-        for s, (a, b) in enumerate(bounds):
-            ep_idx = conf.eps[s]
-            t = sum(self.layer_time(self.layers[i], ep_idx) for i in range(a, b))
-            # inter-stage transfer: output activations of the stage's last
-            # layer cross the link to the next stage's EP.
-            if s < conf.depth - 1:
-                ep = self.platform.eps[ep_idx]
+        fabric = self.platform.fabric
+        if fabric is None:
+            out = []
+            for s in range(n_links):
+                ep = self.platform.eps[conf.eps[s]]
                 nxt = self.platform.eps[conf.eps[s + 1]]
                 bw = min(ep.link_bw, nxt.link_bw)
                 lat = max(ep.link_latency, nxt.link_latency)
-                t += self.layers[b - 1].act_bytes / bw + lat
+                out.append(self.layers[bounds[s][1] - 1].act_bytes / bw + lat)
+            return out
+        from ..interconnect import Flow
+
+        flows = [
+            Flow(conf.eps[s], conf.eps[s + 1], self.layers[bounds[s][1] - 1].act_bytes)
+            for s in range(n_links)
+        ]
+        return fabric.flow_times(flows + list(self.background_flows))[:n_links]
+
+    def stage_times(self, conf: PipelineConfig) -> list[float]:
+        times = []
+        link = self.transfer_times(conf)
+        for s, (a, b) in enumerate(conf.boundaries()):
+            ep_idx = conf.eps[s]
+            t = sum(self.layer_time(self.layers[i], ep_idx) for i in range(a, b))
+            if s < conf.depth - 1:
+                t += link[s]
             times.append(t)
         return times
 
@@ -119,15 +153,12 @@ class DatabaseEvaluator(AnalyticEvaluator):
 
     def stage_times(self, conf: PipelineConfig) -> list[float]:
         times = []
+        link = self.transfer_times(conf)
         for s, (a, b) in enumerate(conf.boundaries()):
             ep_idx = conf.eps[s]
             t = sum(self._db[(i, ep_idx)] for i in range(a, b))
             if s < conf.depth - 1:
-                ep = self.platform.eps[ep_idx]
-                nxt = self.platform.eps[conf.eps[s + 1]]
-                bw = min(ep.link_bw, nxt.link_bw)
-                lat = max(ep.link_latency, nxt.link_latency)
-                t += self.layers[b - 1].act_bytes / bw + lat
+                t += link[s]
             times.append(t)
         return times
 

@@ -23,7 +23,10 @@ only ever see ``Platform`` / ``EP`` objects.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import TYPE_CHECKING, Sequence
+
+if TYPE_CHECKING:
+    from ..interconnect import Fabric
 
 # ---------------------------------------------------------------------------
 # EP / Platform
@@ -59,14 +62,26 @@ class EP:
 
 @dataclasses.dataclass(frozen=True)
 class Platform:
-    """A fixed set of EPs (the machine Shisha schedules onto)."""
+    """A fixed set of EPs (the machine Shisha schedules onto).
+
+    ``fabric`` (optional) attaches a routed, contention-priced interconnect
+    (:class:`~repro.interconnect.Fabric`); without one, every consumer falls
+    back to the scalar per-EP ``link_bw``/``link_latency`` model, which a
+    fully-connected fabric reproduces bit-for-bit.  The field is excluded
+    from comparison/hash so platform equality keeps its pre-fabric meaning.
+    """
 
     name: str
     eps: tuple[EP, ...]
+    fabric: "Fabric | None" = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self):
         if not self.eps:
             raise ValueError("platform needs at least one EP")
+        if self.fabric is not None and self.fabric.n_eps != len(self.eps):
+            raise ValueError(
+                f"fabric binds {self.fabric.n_eps} EPs but platform has {len(self.eps)}"
+            )
 
     @property
     def n_eps(self) -> int:
@@ -99,19 +114,38 @@ class Platform:
             ),
         )
 
+    def with_fabric(self, fabric: "Fabric") -> "Platform":
+        """Copy of the platform with an interconnect fabric attached."""
+        return dataclasses.replace(self, fabric=fabric)
+
     def with_latency(self, latency_s: float) -> "Platform":
         """Copy of the platform with every inter-EP link latency replaced.
 
-        Used by the Fig. 9 experiment (inter-chiplet latency sweep).
+        Used by the Fig. 9 experiment (inter-chiplet latency sweep).  When a
+        fabric is attached, its per-link latencies are replaced too, so the
+        knob stays meaningful in both the scalar and the routed path (a
+        routed transfer then pays ``hops * latency_s``).
         """
         eps = tuple(dataclasses.replace(ep, link_latency=latency_s) for ep in self.eps)
-        return dataclasses.replace(self, name=f"{self.name}@lat{latency_s:g}", eps=eps)
+        fabric = self.fabric.with_link_latency(latency_s) if self.fabric is not None else None
+        return dataclasses.replace(
+            self, name=f"{self.name}@lat{latency_s:g}", eps=eps, fabric=fabric
+        )
 
     def without(self, dead: Sequence[int]) -> "Platform":
-        """Copy of the platform with EPs ``dead`` removed (elastic rescale)."""
+        """Copy of the platform with EPs ``dead`` removed (elastic rescale).
+
+        An attached fabric is restricted to the survivors: the dead chiplet's
+        router keeps forwarding (routes are physically unchanged), only the
+        EP binding shrinks.
+        """
         dead_set = set(dead)
-        eps = tuple(ep for i, ep in enumerate(self.eps) if i not in dead_set)
-        return dataclasses.replace(self, name=f"{self.name}-minus{sorted(dead_set)}", eps=eps)
+        keep = [i for i in range(len(self.eps)) if i not in dead_set]
+        eps = tuple(self.eps[i] for i in keep)
+        fabric = self.fabric.restrict(keep) if self.fabric is not None else None
+        return dataclasses.replace(
+            self, name=f"{self.name}-minus{sorted(dead_set)}", eps=eps, fabric=fabric
+        )
 
 
 # ---------------------------------------------------------------------------

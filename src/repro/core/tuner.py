@@ -16,6 +16,16 @@ Deviation noted in DESIGN.md: when the slowest stage is down to one layer,
 the directional move would empty it; we collapse the stage instead (depth
 shrinks by one, its EP is freed), mirroring what the paper's layer drain
 implies.
+
+With ``placement=True`` each step additionally proposes *which EP hosts the
+slowest stage*: the stage is trial-relocated onto the best free EP (fastest
+class first, then lowest fabric-routed latency to its pipeline neighbours,
+then FLOPs, then index).  On a platform with an interconnect fabric this is
+what lets the tuner route around congested links — placement on the chiplet
+fabric becomes a first-class decision, not just stage sizing.  The extra
+candidate is charged to the trace like any online trial, so the
+convergence-cost accounting stays honest; with ``placement=False`` the loop
+is exactly the paper's Algorithm 2, trial for trial.
 """
 
 from __future__ import annotations
@@ -83,6 +93,56 @@ def pick_target(
     raise ValueError(f"unknown balancing {balancing!r}")
 
 
+def _relocate(conf: PipelineConfig, stage: int, new_ep: int) -> PipelineConfig:
+    eps = list(conf.eps)
+    eps[stage] = new_ep
+    return PipelineConfig(stages=conf.stages, eps=tuple(eps))
+
+
+def placement_candidate(
+    conf: PipelineConfig,
+    slowest: int,
+    platform,
+    exclude: frozenset = frozenset(),
+) -> int | None:
+    """Best free EP to rehost the slowest stage on, or None.
+
+    Deterministic preference: fastest perf class, then smallest
+    fabric-routed latency to the stage's pipeline neighbours (0 without a
+    fabric), then highest aggregate FLOPs, then lowest index.  Only unused
+    EPs are proposed (the EP assignment is injective), so when the pipeline
+    occupies every EP there is nothing to propose.  ``exclude`` removes EPs
+    that must never host a stage (e.g. dead EPs in a drifted model, whose
+    near-zero sentinel specs would make the relocation trial absurdly
+    expensive).
+    """
+    used = set(conf.eps) | set(exclude)
+    free = [e for e in range(platform.n_eps) if e not in used]
+    if not free:
+        return None
+    fabric = platform.fabric
+
+    def neighbour_latency(e: int) -> float:
+        if fabric is None:
+            return 0.0
+        tot = 0.0
+        if slowest > 0:
+            tot += fabric.latency_ep(conf.eps[slowest - 1], e)
+        if slowest < conf.depth - 1:
+            tot += fabric.latency_ep(e, conf.eps[slowest + 1])
+        return tot
+
+    return min(
+        free,
+        key=lambda e: (
+            platform.eps[e].perf_class,
+            neighbour_latency(e),
+            -platform.eps[e].flops,
+            e,
+        ),
+    )
+
+
 @dataclasses.dataclass
 class TuneResult:
     best_conf: PipelineConfig
@@ -97,8 +157,17 @@ def tune(
     alpha: int = 10,
     balancing: Balancing = "nlfep",
     max_steps: int = 10_000,
+    placement: bool = False,
+    placement_exclude: frozenset = frozenset(),
 ) -> TuneResult:
-    """Algorithm 2.  ``trace`` wraps the evaluator and accounts cost."""
+    """Algorithm 2.  ``trace`` wraps the evaluator and accounts cost.
+
+    ``placement=True`` adds one extra trial per step — relocating the
+    slowest stage onto the best free EP (never one in
+    ``placement_exclude``) — and adopts whichever measured candidate
+    (boundary move or relocation) is fastest.  Off by default: the paper's
+    loop is reproduced move for move.
+    """
     conf = seed.conf if isinstance(seed, Seed) else seed
     platform = trace.evaluator.platform
     throughput = trace.execute(conf)
@@ -109,15 +178,24 @@ def tune(
         steps += 1
         stage_times = trace.evaluator.stage_times(conf)
         slowest = max(range(conf.depth), key=stage_times.__getitem__)
+        candidates: list[PipelineConfig] = []
         target = pick_target(conf, stage_times, slowest, platform, balancing)
-        if target is None:
-            break  # perfectly balanced or single stage: nothing to move
-        direction = 1 if target > slowest else -1
-        nxt = _move_toward(conf, slowest, direction)
-        if nxt is None or nxt == conf:
-            break
-        conf = nxt
-        tp = trace.execute(conf)
+        if target is not None:
+            direction = 1 if target > slowest else -1
+            nxt = _move_toward(conf, slowest, direction)
+            if nxt is not None and nxt != conf:
+                candidates.append(nxt)
+        if placement:
+            new_ep = placement_candidate(conf, slowest, platform, placement_exclude)
+            if new_ep is not None:
+                candidates.append(_relocate(conf, slowest, new_ep))
+        if not candidates:
+            break  # perfectly balanced, single stage, or nowhere to move
+        # every candidate is a paid online trial; ties resolve to the first
+        # (boundary move before relocation), keeping the no-placement path
+        # identical to the paper's loop
+        measured = [(trace.execute(c), c) for c in candidates]
+        tp, conf = max(measured, key=lambda m: m[0])
         if tp <= throughput:
             gamma += 1
         else:

@@ -1,0 +1,48 @@
+"""``repro.interconnect`` — the chiplet fabric as a first-class subsystem.
+
+Shisha's premise is heterogeneity "at the level of cores, memory subsystem
+and the interconnect" (§2); the pre-fabric evaluator collapsed the third
+axis to one scalar link (the Fig. 9 latency knob).  This package models the
+interconnect as a graph instead:
+
+  * :mod:`.topology` — router nodes + per-link bandwidth/latency, preset
+    fabrics (2D mesh, ring, crossbar, hierarchical package-of-chiplets,
+    fully-connected) and deterministic routing (XY on meshes, tie-broken
+    Dijkstra elsewhere).
+  * :mod:`.fabric`   — the EP -> node binding plus contention pricing:
+    fair-share slowdown on shared links and memory-controller hotspots,
+    evaluated over the steady-state flow set of a pipelined schedule.
+
+Attach a fabric with ``Platform.with_fabric`` and every consumer — the
+evaluators, Algorithm 2 (including its placement-aware moves), the serving
+simulator and the multi-tenant co-simulator — prices transfers over routed,
+contended paths; leave it off (or use :func:`~.fabric.scalar_fabric`) and
+all pre-fabric results reproduce bit-for-bit.
+"""
+
+from .fabric import Fabric, Flow, scalar_fabric, uniform_fabric
+from .topology import (
+    Link,
+    LinkKey,
+    Topology,
+    crossbar,
+    fully_connected,
+    hierarchical,
+    mesh2d,
+    ring,
+)
+
+__all__ = [
+    "Fabric",
+    "Flow",
+    "Link",
+    "LinkKey",
+    "Topology",
+    "crossbar",
+    "fully_connected",
+    "hierarchical",
+    "mesh2d",
+    "ring",
+    "scalar_fabric",
+    "uniform_fabric",
+]

@@ -1,0 +1,194 @@
+"""Contention-priced communication over a chiplet :class:`Topology`.
+
+A :class:`Fabric` binds EP indices to topology nodes and prices transfers
+under a *steady-state flow set*: in a pipelined execution every stage
+boundary ships activations once per beat, so all boundary transfers (plus
+any co-tenant traffic) are concurrently in flight.  Two contention effects
+are modeled, both deliberately simple and monotone:
+
+  * **fair-share links** — ``k`` flows routed through one link each get
+    ``bw / k`` of it (round-robin arbitration at the router); a flow's
+    effective bandwidth is the minimum fair share along its route.  This is
+    the graph version of the paper's "shared memory controller" effect
+    (§6): co-located traffic slows everyone on the shared resource.
+  * **memory-controller hotspots** — when ``mc_bw`` is set, every flow also
+    queues at its endpoint nodes' memory controllers: ``k`` flows sourcing
+    or sinking at one node share ``mc_bw`` there, so fan-in to a single
+    chiplet saturates even over disjoint links.
+
+Transfer time of a flow carrying ``nbytes`` is then
+
+    ``nbytes / eff_bw + sum(link latencies along the route)``
+
+which degenerates to the scalar model (``nbytes / bw + latency``) on a
+fully-connected single-hop fabric with no concurrent flows — bit-for-bit,
+which is what keeps all pre-fabric results unchanged (see
+:func:`scalar_fabric` and the regression tests in
+``tests/test_interconnect.py``).  Adding a flow can only increase link and
+node loads, so contention is monotone: no existing flow ever speeds up.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from .topology import Link, LinkKey, Topology, fully_connected
+
+
+@dataclasses.dataclass(frozen=True)
+class Flow:
+    """One steady-state transfer: ``nbytes`` shipped ``src`` -> ``dst``.
+
+    ``src``/``dst`` are EP indices of the pricing platform by default;
+    ``nodes=True`` marks them as raw topology node ids — the form
+    cross-tenant background flows take, since a tenant's restricted fabric
+    keeps the *global* topology and co-tenant traffic lives outside the
+    tenant's own EP index space.
+    """
+
+    src: int
+    dst: int
+    nbytes: float
+    nodes: bool = False
+
+
+@dataclasses.dataclass(eq=False)
+class Fabric:
+    """A topology plus the EP -> node binding and the contention model.
+
+    ``ep_nodes[i]`` is the router node EP ``i`` sits on.  Restricting a
+    fabric to a subset of EPs (:meth:`restrict`) keeps the full topology —
+    a dead or foreign chiplet's router still forwards traffic — and only
+    narrows the binding, so sub-platform routes are physically identical to
+    global ones.
+    """
+
+    topology: Topology
+    #: EP index -> topology node
+    ep_nodes: tuple[int, ...]
+    #: per-node memory-controller bandwidth shared by flows that source or
+    #: sink at the node; None disables the hotspot model
+    mc_bw: float | None = None
+
+    def __post_init__(self):
+        self.ep_nodes = tuple(self.ep_nodes)
+        for n in self.ep_nodes:
+            if not (0 <= n < self.topology.n_nodes):
+                raise ValueError(f"EP node {n} outside topology {self.topology.name!r}")
+
+    @property
+    def n_eps(self) -> int:
+        return len(self.ep_nodes)
+
+    def node(self, ep_idx: int) -> int:
+        return self.ep_nodes[ep_idx]
+
+    def restrict(self, kept: Sequence[int]) -> "Fabric":
+        """The fabric as seen by a sub-platform holding EPs ``kept``."""
+        return Fabric(
+            topology=self.topology,
+            ep_nodes=tuple(self.ep_nodes[i] for i in kept),
+            mc_bw=self.mc_bw,
+        )
+
+    def with_link_latency(self, latency_s: float) -> "Fabric":
+        """Every link latency replaced — the Fig. 9 knob on a real fabric."""
+        return Fabric(
+            topology=self.topology.with_link_latency(latency_s),
+            ep_nodes=self.ep_nodes,
+            mc_bw=self.mc_bw,
+        )
+
+    # -- routing shortcuts ----------------------------------------------------
+
+    def route_ep(self, src_ep: int, dst_ep: int) -> tuple[LinkKey, ...]:
+        return self.topology.route(self.ep_nodes[src_ep], self.ep_nodes[dst_ep])
+
+    def latency_ep(self, src_ep: int, dst_ep: int) -> float:
+        return self.topology.path_latency(self.ep_nodes[src_ep], self.ep_nodes[dst_ep])
+
+    # -- contention pricing ---------------------------------------------------
+
+    def _endpoints(self, flow: Flow) -> tuple[int, int]:
+        if flow.nodes:
+            return flow.src, flow.dst
+        return self.ep_nodes[flow.src], self.ep_nodes[flow.dst]
+
+    def flow_times(self, flows: Sequence[Flow]) -> list[float]:
+        """Transfer time of each flow under the whole set's contention.
+
+        Deterministic in the multiset of flows; a flow between co-located
+        endpoints costs 0 (it never leaves the chiplet).
+        """
+        pairs = [self._endpoints(f) for f in flows]
+        routes = [
+            self.topology.route(s, d) if s != d else () for (s, d) in pairs
+        ]
+        link_load: dict[LinkKey, int] = {}
+        node_load: dict[int, int] = {}
+        for (s, d), r in zip(pairs, routes):
+            for k in r:
+                link_load[k] = link_load.get(k, 0) + 1
+            if r and self.mc_bw is not None:
+                node_load[s] = node_load.get(s, 0) + 1
+                node_load[d] = node_load.get(d, 0) + 1
+        times = []
+        for f, (s, d), r in zip(flows, pairs, routes):
+            if not r:
+                times.append(0.0)
+                continue
+            eff = min(self.topology.links[k].bw / link_load[k] for k in r)
+            if self.mc_bw is not None:
+                eff = min(eff, self.mc_bw / node_load[s], self.mc_bw / node_load[d])
+            times.append(f.nbytes / eff + sum(self.topology.links[k].latency for k in r))
+        return times
+
+    def transfer_time(
+        self,
+        src_ep: int,
+        dst_ep: int,
+        nbytes: float,
+        background: Sequence[Flow] = (),
+    ) -> float:
+        """Price one transfer given concurrent ``background`` flows."""
+        flows = [Flow(src_ep, dst_ep, nbytes)] + list(background)
+        return self.flow_times(flows)[0]
+
+
+# ---------------------------------------------------------------------------
+# platform-derived preset
+# ---------------------------------------------------------------------------
+
+
+def scalar_fabric(platform) -> Fabric:
+    """The degenerate fabric that reproduces the scalar-link model exactly.
+
+    Every EP pair gets a direct link with ``bw = min`` / ``latency = max``
+    of the two EPs' scalar link specs — precisely the expression
+    ``core.evaluator`` used before fabrics existed, so a platform with this
+    fabric attached prices every transfer bit-for-bit identically to the
+    same platform without one (single-hop route, load 1, no hotspot model).
+    ``platform`` is duck-typed (anything with ``.eps[i].link_bw`` /
+    ``.link_latency``) to keep this package import-free of ``repro.core``.
+    """
+    eps = platform.eps
+    links: dict[LinkKey, Link] = {}
+    for i in range(len(eps)):
+        for j in range(i + 1, len(eps)):
+            links[(i, j)] = Link(
+                bw=min(eps[i].link_bw, eps[j].link_bw),
+                latency=max(eps[i].link_latency, eps[j].link_latency),
+            )
+    topo = Topology(name=f"{platform.name}-scalar", n_nodes=len(eps), links=links)
+    return Fabric(topology=topo, ep_nodes=tuple(range(len(eps))))
+
+
+def uniform_fabric(
+    topology: Topology, n_eps: int | None = None, mc_bw: float | None = None
+) -> Fabric:
+    """Bind EPs 0..n-1 to topology nodes 0..n-1 (the common identity case)."""
+    n = n_eps if n_eps is not None else topology.n_nodes
+    if n > topology.n_nodes:
+        raise ValueError(f"{n} EPs need at least {n} nodes, topology has {topology.n_nodes}")
+    return Fabric(topology=topology, ep_nodes=tuple(range(n)), mc_bw=mc_bw)

@@ -1,0 +1,243 @@
+"""Chiplet interconnect topology: nodes, links and deterministic routing.
+
+The paper (Shisha §2/§6) defines heterogeneity "at the level of cores,
+memory subsystem *and the interconnect*", and its Fig. 9 sensitivity study
+sweeps a single inter-chiplet latency scalar.  This module upgrades that
+scalar into a graph: a :class:`Topology` is a set of router nodes joined by
+:class:`Link`\\ s with individual bandwidth/latency, plus a deterministic
+routing function.  Presets cover the fabrics real chiplet packages use —
+2D mesh (XY dimension-ordered routing), ring, crossbar (a star through a
+central switch) and a hierarchical "package of chiplets" — alongside the
+fully-connected degenerate that reproduces the old scalar-link model
+bit-for-bit (see :func:`repro.interconnect.fabric.scalar_fabric`).
+
+Routing is a pure function of the topology: the same (src, dst) pair always
+returns the identical link sequence, which is what keeps the evaluator and
+every tuner built on it deterministic.  Mesh topologies use XY
+dimension-ordered routing (the standard deadlock-free NoC choice); every
+other topology routes by Dijkstra over (total latency, hop count, lexico-
+graphically smallest node sequence), so ties can never depend on dict or
+heap iteration order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Mapping, Sequence
+
+#: normalized undirected link key: (u, v) with u < v
+LinkKey = tuple[int, int]
+
+
+@dataclasses.dataclass(frozen=True)
+class Link:
+    """One physical inter-router link."""
+
+    #: bandwidth, bytes/s
+    bw: float
+    #: one-way traversal latency, seconds (per-hop share of the Fig. 9 knob)
+    latency: float
+
+    def __post_init__(self):
+        if self.bw <= 0 or self.latency < 0:
+            raise ValueError(f"bad link spec bw={self.bw} latency={self.latency}")
+
+
+def _key(u: int, v: int) -> LinkKey:
+    if u == v:
+        raise ValueError(f"self-link at node {u}")
+    return (u, v) if u < v else (v, u)
+
+
+@dataclasses.dataclass(eq=False)
+class Topology:
+    """An undirected interconnect graph with per-link bandwidth/latency.
+
+    ``coords`` (optional) places nodes on a 2D grid and switches routing to
+    XY dimension-ordered; without coordinates routes come from deterministic
+    Dijkstra.  Instances compare by identity — two separately built
+    topologies are distinct objects even if structurally equal, which keeps
+    them safely usable inside frozen :class:`~repro.core.platform.Platform`
+    dataclasses (the ``fabric`` field is excluded from comparison).
+    """
+
+    name: str
+    n_nodes: int
+    links: Mapping[LinkKey, Link]
+    #: node -> (x, y) grid position; enables XY routing on meshes
+    coords: Mapping[int, tuple[int, int]] | None = None
+
+    def __post_init__(self):
+        if self.n_nodes < 1:
+            raise ValueError("topology needs at least one node")
+        self.links = {_key(*k): l for k, l in self.links.items()}
+        adj: dict[int, list[int]] = {n: [] for n in range(self.n_nodes)}
+        for (u, v) in self.links:
+            if not (0 <= u < self.n_nodes and 0 <= v < self.n_nodes):
+                raise ValueError(f"link ({u},{v}) outside 0..{self.n_nodes - 1}")
+            adj[u].append(v)
+            adj[v].append(u)
+        #: node -> sorted neighbour list (sorted: no dict-order dependence)
+        self._adj = {n: tuple(sorted(ns)) for n, ns in adj.items()}
+        self._routes: dict[tuple[int, int], tuple[LinkKey, ...]] = {}
+
+    def link(self, u: int, v: int) -> Link:
+        return self.links[_key(u, v)]
+
+    def neighbors(self, node: int) -> tuple[int, ...]:
+        return self._adj[node]
+
+    # -- routing ------------------------------------------------------------
+
+    def route(self, src: int, dst: int) -> tuple[LinkKey, ...]:
+        """Deterministic link sequence from ``src`` to ``dst``.
+
+        XY dimension-ordered on grids with coordinates (when every grid hop
+        exists), shortest-path otherwise.  Cached: repeated queries are O(1)
+        and — by construction — identical.
+        """
+        if src == dst:
+            return ()
+        key = (src, dst)
+        if key not in self._routes:
+            path = None
+            if self.coords is not None:
+                path = self._xy_path(src, dst)
+            if path is None:
+                path = self._dijkstra_path(src, dst)
+            self._routes[key] = tuple(
+                _key(a, b) for a, b in zip(path, path[1:])
+            )
+        return self._routes[key]
+
+    def path_latency(self, src: int, dst: int) -> float:
+        """Total routed latency (sum of per-hop link latencies)."""
+        return sum(self.links[k].latency for k in self.route(src, dst))
+
+    def hops(self, src: int, dst: int) -> int:
+        return len(self.route(src, dst))
+
+    def _xy_path(self, src: int, dst: int) -> list[int] | None:
+        """X-then-Y dimension-ordered walk; None if a grid hop is missing."""
+        by_pos = {pos: n for n, pos in self.coords.items()}
+        x, y = self.coords[src]
+        dx, dy = self.coords[dst]
+        path = [src]
+        while x != dx:
+            x += 1 if dx > x else -1
+            nxt = by_pos.get((x, y))
+            if nxt is None or _key(path[-1], nxt) not in self.links:
+                return None
+            path.append(nxt)
+        while y != dy:
+            y += 1 if dy > y else -1
+            nxt = by_pos.get((x, y))
+            if nxt is None or _key(path[-1], nxt) not in self.links:
+                return None
+            path.append(nxt)
+        return path
+
+    def _dijkstra_path(self, src: int, dst: int) -> list[int]:
+        """Min (latency, hops, lexicographic node sequence) path."""
+        # heap entries are fully ordered tuples, so pop order -- and thereby
+        # the chosen path -- is independent of insertion order
+        heap: list[tuple[float, int, tuple[int, ...]]] = [(0.0, 0, (src,))]
+        done: set[int] = set()
+        while heap:
+            lat, hops, path = heapq.heappop(heap)
+            node = path[-1]
+            if node == dst:
+                return list(path)
+            if node in done:
+                continue
+            done.add(node)
+            for nxt in self._adj[node]:
+                if nxt not in done:
+                    l = self.links[_key(node, nxt)]
+                    heapq.heappush(heap, (lat + l.latency, hops + 1, path + (nxt,)))
+        raise ValueError(f"no route {src} -> {dst} in topology {self.name!r}")
+
+    # -- derived topologies ---------------------------------------------------
+
+    def with_link_latency(self, latency_s: float) -> "Topology":
+        """Copy with every link's latency replaced (the Fig. 9 sweep knob)."""
+        return Topology(
+            name=f"{self.name}@lat{latency_s:g}",
+            n_nodes=self.n_nodes,
+            links={k: dataclasses.replace(l, latency=latency_s) for k, l in self.links.items()},
+            coords=self.coords,
+        )
+
+
+# ---------------------------------------------------------------------------
+# presets
+# ---------------------------------------------------------------------------
+
+
+def fully_connected(
+    n: int, bw: float = 25e9, latency: float = 100e-9, name: str = "full"
+) -> Topology:
+    """Every node pair joined directly — the degenerate scalar-link fabric."""
+    links = {(i, j): Link(bw, latency) for i in range(n) for j in range(i + 1, n)}
+    return Topology(name=name, n_nodes=n, links=links)
+
+
+def mesh2d(rows: int, cols: int, bw: float = 25e9, latency: float = 100e-9) -> Topology:
+    """``rows x cols`` 2D mesh with XY routing (node = r * cols + c)."""
+    links: dict[LinkKey, Link] = {}
+    coords: dict[int, tuple[int, int]] = {}
+    for r in range(rows):
+        for c in range(cols):
+            n = r * cols + c
+            coords[n] = (c, r)
+            if c + 1 < cols:
+                links[(n, n + 1)] = Link(bw, latency)
+            if r + 1 < rows:
+                links[(n, n + cols)] = Link(bw, latency)
+    return Topology(name=f"mesh{rows}x{cols}", n_nodes=rows * cols, links=links, coords=coords)
+
+
+def ring(n: int, bw: float = 25e9, latency: float = 100e-9) -> Topology:
+    """Bidirectional ring; routes take the shorter arc (ties: smaller ids)."""
+    links = {(i, (i + 1) % n) if i < (i + 1) % n else ((i + 1) % n, i): Link(bw, latency) for i in range(n)}
+    return Topology(name=f"ring{n}", n_nodes=n, links=links)
+
+
+def crossbar(n: int, bw: float = 25e9, latency: float = 100e-9) -> Topology:
+    """A central switch: n ports star-wired to hub node ``n``.
+
+    Every port-to-port route is two hops through the hub (each hub link
+    carries half the end-to-end latency), and port links are the contention
+    points — concurrent flows into one port fair-share its link, which is
+    how a real crossbar's output-port conflicts behave.
+    """
+    links = {(i, n): Link(bw, latency / 2.0) for i in range(n)}
+    return Topology(name=f"xbar{n}", n_nodes=n + 1, links=links)
+
+
+def hierarchical(
+    n_packages: int,
+    chiplets_per_package: int,
+    intra_bw: float = 50e9,
+    intra_latency: float = 50e-9,
+    inter_bw: float = 12.5e9,
+    inter_latency: float = 500e-9,
+) -> Topology:
+    """Packages of chiplets: dense fast links inside a package, one slow
+    gateway link between each package pair (chiplet 0 is the gateway)."""
+    links: dict[LinkKey, Link] = {}
+    cpp = chiplets_per_package
+    for p in range(n_packages):
+        base = p * cpp
+        for i in range(cpp):
+            for j in range(i + 1, cpp):
+                links[(base + i, base + j)] = Link(intra_bw, intra_latency)
+    for p in range(n_packages):
+        for q in range(p + 1, n_packages):
+            links[(p * cpp, q * cpp)] = Link(inter_bw, inter_latency)
+    return Topology(
+        name=f"hier{n_packages}x{cpp}",
+        n_nodes=n_packages * cpp,
+        links=links,
+    )

@@ -56,6 +56,7 @@ from .traffic import (
     PoissonTraffic,
     ReplayTraffic,
     TrafficGenerator,
+    interarrival_cv2,
 )
 
 __all__ = [
@@ -84,6 +85,7 @@ __all__ = [
     "co_serve",
     "compare_partitions",
     "drifted_platform",
+    "interarrival_cv2",
     "partition_eps",
     "percentile",
     "slo_violation_rate",

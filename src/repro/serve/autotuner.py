@@ -242,6 +242,12 @@ class ContinuousShisha:
     max_batch_cap: int = 8
     batch_efficiency: float = 0.7
     batch_latency_margin: float = 0.5
+    #: enable Algorithm 2's fabric-aware EP-relocation moves in re-tunes
+    placement: bool = False
+    #: live co-tenant flow set (node-space) the *model* evaluator prices
+    #: transfers against — set by a contention-aware co-simulator each
+    #: monitor window; empty = contention-blind tuning
+    background_flows: tuple = ()
 
     def __post_init__(self):
         if self.make_evaluator is None:
@@ -297,8 +303,14 @@ class ContinuousShisha:
     ) -> Retune:
         """Run Algorithm 2 (plus the batch-knob search) on the drift model."""
         model = drifted_platform(self.platform, drift, dead)
+        model_ev = self.make_evaluator(model)
+        if self.background_flows and model.fabric is not None:
+            # contention-aware: the model prices transfers under the live
+            # co-tenant flow set, so exploration sees congested links as
+            # slow and routes/places around them
+            model_ev.background_flows = tuple(self.background_flows)
         trace = Trace(
-            self.make_evaluator(model),
+            model_ev,
             measure_batches=self.measure_batches,
             reconfig_overhead=self.reconfig_overhead,
         )
@@ -315,10 +327,24 @@ class ContinuousShisha:
                 n_stages=min(n_alive, len(self.layers)),
                 choice="rank_w",
             )
-            result = tune(seed, trace, alpha=self.alpha, balancing=self.balancing)
+            result = tune(
+                seed,
+                trace,
+                alpha=self.alpha,
+                balancing=self.balancing,
+                placement=self.placement,
+                placement_exclude=frozenset(dead),
+            )
         else:
             # warm start from the serving configuration (paper's online mode)
-            result = tune(warm_conf, trace, alpha=self.alpha, balancing=self.balancing)
+            result = tune(
+                warm_conf,
+                trace,
+                alpha=self.alpha,
+                balancing=self.balancing,
+                placement=self.placement,
+                placement_exclude=frozenset(dead),
+            )
         policy = None
         if self.batch_policy_search and self.slo is not None:
             policy = tune_batch_policy(

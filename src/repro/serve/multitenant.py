@@ -25,7 +25,12 @@ whose partition lost an EP steals the lowest-marginal-value EP from donor
 tenants (priced by each donor's model throughput and SLO pressure), after
 which every affected tenant re-tunes via its
 :class:`~repro.serve.autotuner.ContinuousShisha`, paying the full
-``Trace.wall`` exploration cost on the shared clock.
+``Trace.wall`` exploration cost on the shared clock.  Revivals are elastic
+too: a dead EP that comes back is granted to the highest-surplus tenant by
+the same pricing.  When the global platform carries an interconnect fabric,
+the co-simulator additionally injects every lane's live activation flows
+into the other lanes each monitor window, so co-tenant traffic congests the
+links it shares (§6's contention effect, live on the event loop).
 """
 
 from __future__ import annotations
@@ -38,6 +43,7 @@ from ..core.cost_model import Layer, weights as layer_weights
 from ..core.evaluator import AnalyticEvaluator, DatabaseEvaluator, Trace
 from ..core.heuristics import run_shisha
 from ..core.platform import Platform
+from ..interconnect import Flow
 from ..pipeline.hetero import EPDerates
 from .autotuner import ContinuousShisha, drifted_platform, tune_batch_policy
 from .simulator import (
@@ -119,8 +125,16 @@ def partition_eps(
 
 
 def subplatform(platform: Platform, ep_idxs: Sequence[int], name: str) -> Platform:
-    """A tenant's private view: the selected EPs, reindexed from 0."""
-    return Platform(name=name, eps=tuple(platform.eps[i] for i in ep_idxs))
+    """A tenant's private view: the selected EPs, reindexed from 0.
+
+    An attached fabric is restricted, not rebuilt: the tenant's transfers
+    still route over the *global* topology (through routers of chiplets it
+    does not own), which is exactly what lets co-tenant flows contend.
+    """
+    fabric = platform.fabric.restrict(ep_idxs) if platform.fabric is not None else None
+    return Platform(
+        name=name, eps=tuple(platform.eps[i] for i in ep_idxs), fabric=fabric
+    )
 
 
 @dataclasses.dataclass
@@ -137,11 +151,18 @@ class TenantResult:
 
 @dataclasses.dataclass
 class RepartitionEvent:
-    """One elastic re-allocation, as recorded by the co-simulator."""
+    """One elastic re-allocation, as recorded by the co-simulator.
+
+    ``kind`` distinguishes a ``"dropout"`` steal (an EP died, the victim
+    stole a replacement) from a ``"revival"`` grant (a dead EP came back and
+    was offered to the highest-surplus tenant: ``victim`` is the *receiving*
+    tenant, ``stolen_ep`` the revived EP, ``price`` its winning gain,
+    ``donor`` None).
+    """
 
     t: float
-    dead_ep: int  # global EP index whose death triggered the event
-    victim: str  # tenant that lost the EP
+    dead_ep: int  # global EP index whose death/revival triggered the event
+    victim: str  # tenant that lost the EP (dropout) / received it (revival)
     donor: str | None  # tenant that gave one up (None: nobody could)
     stolen_ep: int | None  # global EP index moved donor -> victim
     price: float | None  # donor's marginal value of the stolen EP
@@ -150,6 +171,7 @@ class RepartitionEvent:
     #: tenant name -> Trace.wall exploration seconds charged on the shared
     #: clock for the forced re-tune this event caused
     retune_costs: dict[str, float]
+    kind: str = "dropout"
 
 
 class ElasticPartitioner:
@@ -279,9 +301,14 @@ class SharedClockCoSimulator:
     Each tenant is a *lane*: a :class:`ServingSimulator` over its
     sub-platform, bound to the shared :class:`EventLoop`.  Lanes never touch
     each other's queues — the cross-tenant channels are exactly (a) the
-    partition, which the :class:`ElasticPartitioner` may rewrite mid-flight,
-    and (b) the global fault script, which hits global EP indices and lands
-    on whichever lane owns the EP at fault time.
+    partition, which the :class:`ElasticPartitioner` may rewrite mid-flight
+    (dropout steals *and* revival grants), (b) the global fault script,
+    which hits global EP indices and lands on whichever lane owns the EP at
+    fault time, and (c) the interconnect fabric, when the global platform
+    carries one: every monitor window each lane's live activation flows are
+    injected into the other lanes' evaluators (and, when
+    ``contention_aware``, their tuners), so co-tenant traffic fair-shares
+    the links it crosses.
 
     The co-simulator's own monitor tick runs *before* the lanes' ticks at
     equal timestamps (it is pushed first), so a re-partition decision
@@ -304,6 +331,8 @@ class SharedClockCoSimulator:
         monitor_interval: float = 0.5,
         measure_batches: int = 8,
         alpha: int = 10,
+        contention_aware: bool = True,
+        placement: bool = False,
     ):
         if make_evaluator is None:
             make_evaluator = lambda p, layers: DatabaseEvaluator(p, layers)
@@ -316,6 +345,13 @@ class SharedClockCoSimulator:
         self.elastic = elastic
         self.batch_policy_search = batch_policy_search
         self.monitor_interval = monitor_interval
+        #: ground truth always prices co-tenant flows (physics); this knob
+        #: decides whether the lanes' *tuners* also see them (scheduler
+        #: knowledge) — the contention-blind/-aware comparison of
+        #: benchmarks/fig9_interconnect.py
+        self.contention_aware = contention_aware
+        #: enable Algorithm 2's placement moves in every lane re-tune
+        self.placement = placement
         #: exploration-cost knobs for the lanes' mid-flight re-tunes: fewer
         #: measurement batches / a smaller α shorten the window the old
         #: (degraded) configuration keeps serving — the Shisha trade-off
@@ -343,6 +379,7 @@ class SharedClockCoSimulator:
         self.global_drift: list[float] = [1.0] * platform.n_eps
         self.global_dead: set[int] = set()
         self._unhandled_dead: list[int] = []
+        self._unhandled_revived: list[int] = []
         self._scripted: list[tuple[float, Callable]] = []
 
     # -- lane construction --------------------------------------------------
@@ -356,7 +393,9 @@ class SharedClockCoSimulator:
         sub = self._sub(tenant, ep_idxs)
         ev = self.make_evaluator(sub, tenant.layers)
         trace = Trace(ev)
-        sh = run_shisha(layer_weights(tenant.layers), trace, self.heuristic)
+        sh = run_shisha(
+            layer_weights(tenant.layers), trace, self.heuristic, placement=self.placement
+        )
         conf = sh.result.best_conf
         policy = None
         if self.batch_policy_search:
@@ -377,6 +416,7 @@ class SharedClockCoSimulator:
             batch_efficiency=self.batch_efficiency,
             measure_batches=self.measure_batches,
             alpha=self.alpha,
+            placement=self.placement,
         )
         self._launch[tenant.name] = {
             "conf_pretty": conf.pretty([ep.name for ep in sub.eps]),
@@ -430,6 +470,36 @@ class SharedClockCoSimulator:
 
         self._scripted.append((t, apply))
 
+    def schedule_revival(self, t: float, ep_idx: int) -> None:
+        """At ``t`` dead global EP ``ep_idx`` comes back.
+
+        If some lane still serves on it (static partitions, or a dropout
+        whose re-partition has not landed yet), the revival is a lane-local
+        recovery.  Otherwise — elastic mode, the EP was rebalanced out of
+        every partition — it is offered to the highest-surplus tenant via
+        the ElasticPartitioner pricing at the next co-monitor tick.
+        """
+
+        def apply(sim: "SharedClockCoSimulator", now: float) -> None:
+            if ep_idx not in sim.global_dead:
+                return
+            sim.global_dead.discard(ep_idx)
+            # runtime effect: a lane still serving on the EP (static mode,
+            # or an elastic re-partition whose install has not landed yet)
+            # resumes its stages immediately ...
+            serving = sim._serving_owner_of(ep_idx)
+            if serving is not None:
+                local = sim._installed[serving].index(ep_idx)
+                sim.lanes[serving].apply_revival(local, now)
+            # ... while the allocation response follows ownership, exactly
+            # like schedule_dropout: if the partitions no longer contain the
+            # EP (it was rebalanced away), it must be re-granted even when
+            # some lane transiently serves on it during its install window
+            if sim.elastic and sim._owner_of(ep_idx) is None:
+                sim._unhandled_revived.append(ep_idx)
+
+        self._scripted.append((t, apply))
+
     def _owner_of(self, ep_idx: int) -> str | None:
         """Allocation truth: which tenant the EP is assigned to."""
         for name, part in self.partitions.items():
@@ -462,6 +532,22 @@ class SharedClockCoSimulator:
         urgency = in_system / tenant.slo if tenant.slo > 0 else 0.0
         return demand, urgency
 
+    def _pricer(self) -> ElasticPartitioner:
+        """Decision-time pricer over the drift-adjusted platform.
+
+        Price on what the hardware can do *now*: a derated EP must not be
+        valued as if healthy, so the pricer sees the drift-adjusted
+        platform (fresh per decision — its cache is drift-specific).
+        """
+        return ElasticPartitioner(
+            drifted_platform(
+                self.platform, EPDerates(factors=tuple(self.global_drift))
+            ),
+            self.make_evaluator,
+            self.heuristic,
+            self.elastic_partitioner.headroom,
+        )
+
     def _repartition(self, t: float, dead_ep: int) -> None:
         victim = self._owner_of(dead_ep)
         if victim is None:  # already rebalanced away (duplicate dropout)
@@ -473,18 +559,7 @@ class SharedClockCoSimulator:
             e for e in self.partitions[victim] if e != dead_ep
         )
         loads = {name: self._load(name, t) for name in self.partitions}
-        # price on what the hardware can do *now*: a derated EP must not be
-        # valued as if healthy, so the pricer sees the drift-adjusted
-        # platform (fresh per decision — its cache is drift-specific)
-        pricer = ElasticPartitioner(
-            drifted_platform(
-                self.platform, EPDerates(factors=tuple(self.global_drift))
-            ),
-            self.make_evaluator,
-            self.heuristic,
-            self.elastic_partitioner.headroom,
-        )
-        deal = pricer.rebalance(self.partitions, victim, tenants, loads)
+        deal = self._pricer().rebalance(self.partitions, victim, tenants, loads)
         donor = stolen = price = None
         affected = [victim]
         if deal is not None:
@@ -494,6 +569,44 @@ class SharedClockCoSimulator:
             )
             self.partitions[victim] = self.partitions[victim] + (stolen,)
             affected.append(donor)
+        gains_lost = {
+            name: (
+                [stolen] if name == victim and stolen is not None else [],
+                [dead_ep] if name == victim else [stolen],
+            )
+            for name in affected
+        }
+        retune_costs = self._stage_retunes(t, affected, gains_lost)
+        self.repartitions.append(
+            RepartitionEvent(
+                t=t,
+                dead_ep=dead_ep,
+                victim=victim,
+                donor=donor,
+                stolen_ep=stolen,
+                price=price,
+                partitions={k: tuple(v) for k, v in self.partitions.items()},
+                retune_costs=retune_costs,
+                kind="dropout",
+            )
+        )
+
+    def _stage_retunes(
+        self,
+        t: float,
+        affected: Sequence[str],
+        gains_lost: dict[str, tuple[list, list]],
+    ) -> dict[str, float]:
+        """Force-retune every affected lane onto its new partition.
+
+        Shared tail of every partition change (dropout steal or revival
+        grant): each lane retargets its tuner, pays a full exploration
+        window, and installs atomically — every affected lane installs when
+        the *slowest* exploration finishes, so a moved EP is never part of
+        two serving platforms at once (the donor keeps it exactly until the
+        receiver takes it over).
+        """
+        tenants = {x.name: x for x in self.tenants}
         retune_costs: dict[str, float] = {}
         staged: list[tuple[str, object, Replatform, dict]] = []
         for name in affected:
@@ -517,18 +630,15 @@ class SharedClockCoSimulator:
                 drift=ldrift,
                 dead=frozenset(),
             )
+            gained, lost = gains_lost.get(name, ([], []))
             extra = {
                 "eps": list(part),
-                "gained": [stolen] if name == victim and stolen is not None else [],
-                "lost": [dead_ep] if name == victim else [stolen],
+                "gained": gained,
+                "lost": lost,
                 "explore_wall_s": retune.tuning_cost,
             }
             staged.append((name, retune, replat, extra))
             retune_costs[name] = retune.tuning_cost
-        # the handover is atomic: every affected lane installs when the
-        # *slowest* exploration finishes, so a stolen EP is never part of
-        # two serving platforms at once (the donor keeps it exactly until
-        # the victim takes it over)
         window = max((r.tuning_cost for _, r, _, _ in staged), default=0.0)
         for name, retune, replat, extra in staged:
             synced = dataclasses.replace(retune, tuning_cost=window)
@@ -544,16 +654,53 @@ class SharedClockCoSimulator:
                 self,
                 lambda sim, now, n=name, p=self.partitions[name]: sim._finish_install(n, p),
             )
+        return retune_costs
+
+    def _revive(self, t: float, ep_idx: int) -> None:
+        """Offer a revived global EP to the highest-surplus tenant.
+
+        The revived EP belongs to nobody, so there is no donor side: every
+        tenant's *gain* (req/s of at-risk demand the EP would recover,
+        priced by the same ElasticPartitioner arithmetic as a dropout
+        steal) is its bid, and exactly one tenant wins.  Ties — including
+        the all-idle case where every gain is zero — resolve to the tenant
+        with the fewest EPs, then the lexicographically first name, so the
+        EP always rejoins exactly one partition deterministically.
+        """
+        if ep_idx in self.global_dead:
+            return  # died again before the monitor got to it
+        if any(ep_idx in part for part in self.partitions.values()):
+            return  # already owned (duplicate revival)
+        tenants = {x.name: x for x in self.tenants}
+        loads = {name: self._load(name, t) for name in self.partitions}
+        pricer = self._pricer()
+        bids = sorted(
+            (
+                -pricer.gain(tenants[name], part, ep_idx, *loads[name]),
+                len(part),
+                name,
+            )
+            for name, part in self.partitions.items()
+        )
+        neg_gain, _, winner = bids[0]
+        # a starved tenant bids inf (it must be re-housed); record that as
+        # an unpriced grant so serialized payloads stay strict-JSON clean
+        gain = -neg_gain
+        self.partitions[winner] = self.partitions[winner] + (ep_idx,)
+        retune_costs = self._stage_retunes(
+            t, [winner], {winner: ([ep_idx], [])}
+        )
         self.repartitions.append(
             RepartitionEvent(
                 t=t,
-                dead_ep=dead_ep,
-                victim=victim,
-                donor=donor,
-                stolen_ep=stolen,
-                price=price,
+                dead_ep=ep_idx,
+                victim=winner,
+                donor=None,
+                stolen_ep=ep_idx,
+                price=None if math.isinf(gain) else gain,
                 partitions={k: tuple(v) for k, v in self.partitions.items()},
                 retune_costs=retune_costs,
+                kind="revival",
             )
         )
 
@@ -574,7 +721,7 @@ class SharedClockCoSimulator:
             self._on_monitor(t, payload)
 
     def _on_monitor(self, t: float, horizon: float) -> None:
-        while self._unhandled_dead:
+        while self._unhandled_dead or self._unhandled_revived:
             # any lane mid-exploration (or mid-install) defers the decision:
             # a re-partition may touch any lane as donor, and overlapping
             # reconfig windows would install stale configurations
@@ -583,10 +730,55 @@ class SharedClockCoSimulator:
                 for lane in self.lanes.values()
             ):
                 break
-            self._repartition(t, self._unhandled_dead.pop(0))
+            if self._unhandled_dead:
+                dead_ep = self._unhandled_dead.pop(0)
+                if dead_ep in self.global_dead:  # not revived in the meantime
+                    self._repartition(t, dead_ep)
+            else:
+                self._revive(t, self._unhandled_revived.pop(0))
+        self._refresh_flows()
         nxt = t + self.monitor_interval
         if nxt < horizon:
             self.loop.push(nxt, _MONITOR, self, horizon)
+
+    # -- live fabric contention ----------------------------------------------
+
+    def _lane_flows(self, name: str) -> tuple[Flow, ...]:
+        """The lane's current steady-state activation flows, in node space.
+
+        A lane with nothing queued or in flight generates no traffic this
+        window; otherwise every stage boundary of its serving configuration
+        ships its activations once per beat over the global fabric.
+        """
+        lane = self.lanes[name]
+        if not any(st.busy or st.queue for st in lane._stages):
+            return ()
+        part = self._installed[name]
+        conf = lane.conf
+        fabric = self.platform.fabric
+        bounds = conf.boundaries()
+        return tuple(
+            Flow(
+                src=fabric.node(part[conf.eps[s]]),
+                dst=fabric.node(part[conf.eps[s + 1]]),
+                nbytes=lane.evaluator.layers[bounds[s][1] - 1].act_bytes,
+                nodes=True,
+            )
+            for s in range(conf.depth - 1)
+        )
+
+    def _refresh_flows(self) -> None:
+        """Per-window flow injection: each lane serves (and, when
+        ``contention_aware``, tunes) against the other lanes' live flows."""
+        if self.platform.fabric is None:
+            return
+        flows = {name: self._lane_flows(name) for name in self.lanes}
+        for name, lane in self.lanes.items():
+            bg = tuple(
+                f for other, fl in flows.items() if other != name for f in fl
+            )
+            lane.set_background_flows(bg)
+            lane.autotuner.background_flows = bg if self.contention_aware else ()
 
     # -- main ---------------------------------------------------------------
 
@@ -661,12 +853,15 @@ def co_serve(
     monitor_interval: float = 0.5,
     measure_batches: int = 8,
     alpha: int = 10,
+    contention_aware: bool = True,
+    placement: bool = False,
     faults: Sequence[tuple] | None = None,
 ) -> CoServeResult:
     """Partition, tune and co-serve all tenants on one shared clock.
 
-    ``faults`` is a script of ``("slowdown", t, global_ep, factor)`` and
-    ``("dropout", t, global_ep)`` entries applied to the global platform.
+    ``faults`` is a script of ``("slowdown", t, global_ep, factor)``,
+    ``("dropout", t, global_ep)`` and ``("revival", t, global_ep)`` entries
+    applied to the global platform.
     """
     co = SharedClockCoSimulator(
         platform,
@@ -681,12 +876,16 @@ def co_serve(
         monitor_interval=monitor_interval,
         measure_batches=measure_batches,
         alpha=alpha,
+        contention_aware=contention_aware,
+        placement=placement,
     )
     for fault in faults or ():
         if fault[0] == "slowdown":
             co.schedule_slowdown(fault[1], fault[2], fault[3])
         elif fault[0] == "dropout":
             co.schedule_dropout(fault[1], fault[2])
+        elif fault[0] == "revival":
+            co.schedule_revival(fault[1], fault[2])
         else:
             raise ValueError(f"unknown fault kind {fault[0]!r}")
     return co.run(horizon)

@@ -20,6 +20,12 @@ Model (paper terms in parentheses):
   * Faults are scripted on the simulated clock: ``schedule_slowdown`` (EP
     derate, the Fig. 9-style heterogeneity drift) and ``schedule_dropout``
     (EP death — its stage blocks and queues grow until a re-tune).
+  * When the platform carries an interconnect fabric
+    (:class:`~repro.interconnect.Fabric`), stage times include routed,
+    contention-priced transfers; a co-simulator feeds each lane the other
+    tenants' live activation flows every monitor window
+    (:meth:`ServingSimulator.set_background_flows`), so co-tenant traffic
+    congests shared links *on the event loop*, not just at tuning time.
   * Re-tuning (continuous Shisha, ``autotuner.py``) is observed through
     periodic monitor events.  When the autotuner decides to re-tune, the
     simulator *charges the full exploration wall-clock of Algorithm 2*
@@ -254,6 +260,27 @@ class ServingSimulator:
         for s in range(self.conf.depth):
             if self.conf.eps[s] == ep_idx:
                 self._try_start(s, now)
+
+    # -- live fabric contention ---------------------------------------------
+
+    def set_background_flows(self, flows) -> None:
+        """Install the current co-tenant flow set (fabric contention).
+
+        A co-simulator calls this every monitor window with the *other*
+        lanes' steady-state activation flows (node-space
+        :class:`~repro.interconnect.Flow`\\ s): the ground-truth evaluator
+        re-prices every stage-boundary transfer under the shared-link
+        fair-share model, so future service times on this lane reflect the
+        congestion.  No-op when the flow set is unchanged or the platform
+        has no fabric.
+        """
+        if self.evaluator.platform.fabric is None:
+            return
+        flows = tuple(flows)
+        if flows == tuple(self.evaluator.background_flows):
+            return
+        self.evaluator.background_flows = flows
+        self._base_times = list(self.evaluator.stage_times(self.conf))
 
     # -- internals ----------------------------------------------------------
 

@@ -30,7 +30,7 @@ import dataclasses
 import json
 import math
 from pathlib import Path
-from typing import Protocol
+from typing import Protocol, Sequence
 
 import numpy as np
 
@@ -137,6 +137,23 @@ class DiurnalTraffic:
                 out.append(t)
 
 
+def interarrival_cv2(times: Sequence[float]) -> float:
+    """Squared coefficient of variation of a trace's inter-arrival times.
+
+    The burstiness statistic the MMPP fit keys on: a Poisson stream has
+    CV^2 = 1, a Markov-modulated one (calm/burst switching) pushes it above.
+    Returns 1.0 for traces too short to estimate (< 3 arrivals).
+    """
+    if len(times) < 3:
+        return 1.0
+    gaps = [b - a for a, b in zip(times, times[1:])]
+    mean = sum(gaps) / len(gaps)
+    if mean <= 0:
+        return 1.0
+    var = sum((g - mean) ** 2 for g in gaps) / len(gaps)
+    return var / (mean * mean)
+
+
 @dataclasses.dataclass(frozen=True)
 class ReplayTraffic:
     """Replays an explicit, frozen timestamp trace."""
@@ -159,3 +176,77 @@ class ReplayTraffic:
     @classmethod
     def load(cls, path: str | Path) -> "ReplayTraffic":
         return cls(times=tuple(json.loads(Path(path).read_text())))
+
+    def fit_mmpp(
+        self,
+        horizon: float | None = None,
+        window: float | None = None,
+        cv2_threshold: float = 1.15,
+        seed: int = 0,
+    ) -> MMPPTraffic:
+        """Calibrate a 2-state MMPP to this recorded trace (moments fit).
+
+        Method of moments on the trace's burstiness statistics, so synthetic
+        load can be matched to a production arrival log:
+
+          1. The inter-arrival CV^2 (:func:`interarrival_cv2`) gates the
+             model: at or below ``cv2_threshold`` the trace is Poisson-like
+             and the fit degenerates to ``rate_low == rate_high == n/T``
+             (an MMPP whose states are indistinguishable).
+          2. Otherwise arrivals are counted in windows of length ``window``
+             (default: sized for ~8 expected arrivals, enough signal to
+             separate the states) and windows are classified calm/burst by
+             thresholding at the mean count — the two conditional first
+             moments give ``rate_low``/``rate_high``, and the mean run
+             lengths of consecutive same-class windows give the exponential
+             sojourn means ``mean_calm``/``mean_burst``.
+
+        Deterministic; the returned generator replays nothing — it is a
+        fresh seeded process whose statistics match the recording.
+        """
+        times = sorted(self.times)
+        if horizon is not None:
+            # fit the horizon prefix: arrivals past an explicit (exclusive)
+            # horizon would otherwise inflate the mean rate and pile into
+            # the last counting window as a spurious burst
+            times = [t for t in times if t < horizon]
+        T = horizon if horizon is not None else (times[-1] if times else 0.0)
+        if T <= 0 or len(times) < 4:
+            rate = len(times) / T if T > 0 else 0.0
+            return MMPPTraffic(rate_low=rate, rate_high=rate, seed=seed)
+        rate_mean = len(times) / T
+        if interarrival_cv2(times) <= cv2_threshold:
+            return MMPPTraffic(rate_low=rate_mean, rate_high=rate_mean, seed=seed)
+        w = window if window is not None else 8.0 / rate_mean
+        n_win = max(2, int(math.ceil(T / w)))
+        counts = [0] * n_win
+        for t in times:
+            counts[min(int(t / w), n_win - 1)] += 1
+        mean_count = sum(counts) / n_win
+        burst = [c > mean_count for c in counts]
+        if all(burst) or not any(burst):  # threshold failed to split: flat
+            return MMPPTraffic(rate_low=rate_mean, rate_high=rate_mean, seed=seed)
+        n_burst = sum(burst)
+        arr_burst = sum(c for c, b in zip(counts, burst) if b)
+        arr_calm = sum(c for c, b in zip(counts, burst) if not b)
+        rate_high = arr_burst / (n_burst * w)
+        rate_low = arr_calm / ((n_win - n_burst) * w)
+        # mean sojourn = window length x mean run of same-class windows
+        runs: dict[bool, list[int]] = {True: [], False: []}
+        length = 1
+        for prev, cur in zip(burst, burst[1:]):
+            if cur == prev:
+                length += 1
+            else:
+                runs[prev].append(length)
+                length = 1
+        runs[burst[-1]].append(length)
+        mean_burst = w * sum(runs[True]) / len(runs[True])
+        mean_calm = w * sum(runs[False]) / len(runs[False])
+        return MMPPTraffic(
+            rate_low=rate_low,
+            rate_high=rate_high,
+            mean_calm=mean_calm,
+            mean_burst=mean_burst,
+            seed=seed,
+        )

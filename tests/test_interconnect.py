@@ -1,0 +1,295 @@
+"""Interconnect fabric invariants.
+
+The fabric replaces the scalar link model everywhere, so four properties
+are guarded hard:
+
+  * routing determinism — routes are pure functions of the topology;
+  * triangle inequality — routed latency is a metric on uniform fabrics;
+  * degenerate equivalence — a fully-connected fabric built from the EP
+    scalar link specs reproduces the pre-fabric evaluator bit-for-bit;
+  * contention monotonicity — adding a flow never speeds up existing flows.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (
+    AnalyticEvaluator,
+    DatabaseEvaluator,
+    Trace,
+    paper_platform,
+    weights,
+)
+from repro.core.heuristics import run_shisha
+from repro.core.tuner import placement_candidate, tune
+from repro.interconnect import (
+    Flow,
+    crossbar,
+    fully_connected,
+    hierarchical,
+    mesh2d,
+    ring,
+    scalar_fabric,
+    uniform_fabric,
+)
+from repro.models.cnn import network_layers
+
+
+def _all_topologies():
+    return [
+        mesh2d(2, 4, bw=1e8, latency=1e-6),
+        mesh2d(3, 3, bw=1e8, latency=1e-6),
+        ring(8, bw=1e8, latency=1e-6),
+        crossbar(8, bw=1e8, latency=1e-6),
+        hierarchical(2, 4),
+        fully_connected(8),
+    ]
+
+
+# ---------------------------------------------------------------------------
+# routing determinism
+# ---------------------------------------------------------------------------
+
+
+def test_routing_is_deterministic_within_and_across_instances():
+    for make in (
+        lambda: mesh2d(3, 3, bw=1e8, latency=1e-6),
+        lambda: ring(8, bw=1e8, latency=1e-6),
+        lambda: crossbar(8, bw=1e8, latency=1e-6),
+        lambda: hierarchical(2, 4),
+    ):
+        a, b = make(), make()
+        for s in range(a.n_nodes):
+            for d in range(a.n_nodes):
+                r1 = a.route(s, d)
+                assert r1 == a.route(s, d), "route changed between calls"
+                assert r1 == b.route(s, d), "route differs across instances"
+
+
+def test_routes_are_valid_walks():
+    for topo in _all_topologies():
+        for s in range(topo.n_nodes):
+            for d in range(topo.n_nodes):
+                route = topo.route(s, d)
+                if s == d:
+                    assert route == ()
+                    continue
+                node = s
+                for (u, v) in route:
+                    assert node in (u, v), f"route {route} breaks at {node}"
+                    node = v if node == u else u
+                assert node == d
+
+
+def test_mesh_xy_route_has_manhattan_length():
+    topo = mesh2d(3, 4, bw=1e8, latency=1e-6)
+    for s in range(topo.n_nodes):
+        for d in range(topo.n_nodes):
+            (sx, sy), (dx, dy) = topo.coords[s], topo.coords[d]
+            assert topo.hops(s, d) == abs(sx - dx) + abs(sy - dy)
+
+
+# ---------------------------------------------------------------------------
+# triangle inequality
+# ---------------------------------------------------------------------------
+
+
+def test_routed_latency_triangle_inequality():
+    for topo in _all_topologies():
+        n = topo.n_nodes
+        lat = [[topo.path_latency(a, b) for b in range(n)] for a in range(n)]
+        for a in range(n):
+            for b in range(n):
+                for c in range(n):
+                    assert lat[a][c] <= lat[a][b] + lat[b][c] + 1e-15, (
+                        f"{topo.name}: d({a},{c}) > d({a},{b}) + d({b},{c})"
+                    )
+
+
+# ---------------------------------------------------------------------------
+# degenerate fully-connected fabric == scalar-link evaluator
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("evaluator_cls", [AnalyticEvaluator, DatabaseEvaluator])
+def test_scalar_fabric_reproduces_scalar_evaluator_bit_for_bit(evaluator_cls):
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    platf = plat.with_fabric(scalar_fabric(plat))
+    scalar = run_shisha(weights(layers), Trace(evaluator_cls(plat, layers)), "H3")
+    fabric = run_shisha(weights(layers), Trace(evaluator_cls(platf, layers)), "H3")
+    # identical trial sequence: every conf, throughput and wall timestamp
+    assert scalar.result == fabric.result
+    assert [(t.conf, t.throughput, t.t_wall) for t in scalar.trace.trials] == [
+        (t.conf, t.throughput, t.t_wall) for t in fabric.trace.trials
+    ]
+    ev_s, ev_f = evaluator_cls(plat, layers), evaluator_cls(platf, layers)
+    for trial in scalar.trace.trials:
+        assert ev_s.stage_times(trial.conf) == ev_f.stage_times(trial.conf)
+
+
+def test_scalar_fabric_equivalence_survives_latency_knob():
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    conf = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3"
+    ).result.best_conf
+    for lat in (1e-7, 1e-4, 1e-2):
+        a = DatabaseEvaluator(plat.with_latency(lat), layers)
+        b = DatabaseEvaluator(
+            plat.with_fabric(scalar_fabric(plat)).with_latency(lat), layers
+        )
+        assert a.stage_times(conf) == pytest.approx(b.stage_times(conf), abs=1e-9)
+
+
+def test_with_latency_rescales_fabric_links():
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    )
+    swept = plat.with_latency(1e-3)
+    for link in swept.fabric.topology.links.values():
+        assert link.latency == 1e-3
+    # the knob must actually move routed prices: hops * latency
+    assert swept.fabric.latency_ep(0, 7) == pytest.approx(4e-3)
+
+
+# ---------------------------------------------------------------------------
+# contention
+# ---------------------------------------------------------------------------
+
+
+def test_contention_monotonicity_adding_flows_never_speeds_up():
+    for topo in _all_topologies():
+        fab = uniform_fabric(topo, n_eps=8)
+        flows = [
+            Flow(0, 7, 1e6),
+            Flow(1, 6, 2e6),
+            Flow(2, 5, 5e5),
+            Flow(3, 4, 1e6),
+        ]
+        for k in range(1, len(flows)):
+            before = fab.flow_times(flows[:k])
+            after = fab.flow_times(flows[: k + 1])
+            for i in range(k):
+                assert after[i] >= before[i] - 1e-15, (
+                    f"{topo.name}: flow {i} sped up when flow {k} was added"
+                )
+
+
+def test_fair_share_halves_bandwidth_on_a_shared_link():
+    fab = uniform_fabric(mesh2d(1, 2, bw=1e8, latency=0.0))
+    solo = fab.transfer_time(0, 1, 1e6)
+    shared = fab.transfer_time(0, 1, 1e6, background=[Flow(0, 1, 1e6)])
+    assert solo == pytest.approx(1e6 / 1e8)
+    assert shared == pytest.approx(2 * solo)
+
+
+def test_memory_controller_hotspot_throttles_fan_in():
+    topo = mesh2d(2, 4, bw=1e9, latency=0.0)
+    free = uniform_fabric(topo)
+    capped = uniform_fabric(mesh2d(2, 4, bw=1e9, latency=0.0), mc_bw=1e8)
+    # three flows converging on node 0 over disjoint links
+    flows = [Flow(1, 0, 1e6), Flow(4, 0, 1e6)]
+    t_free = free.flow_times(flows)
+    t_capped = capped.flow_times(flows)
+    # link fair-share alone sees disjoint links (full bw each); the MC cap
+    # makes the two flows share 1e8 at node 0
+    assert t_free[0] == pytest.approx(1e6 / 1e9)
+    assert t_capped[0] == pytest.approx(1e6 / (1e8 / 2))
+
+
+def test_colocated_flow_is_free_and_restrict_preserves_routes():
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    )
+    fab = plat.fabric
+    assert fab.flow_times([Flow(3, 3, 1e9)]) == [0.0]
+    sub = fab.restrict([2, 5, 7])
+    # local EP 0 is global EP 2: same node, same physical routes
+    assert sub.node(0) == fab.node(2)
+    assert sub.route_ep(0, 2) == fab.route_ep(2, 7)
+
+
+# ---------------------------------------------------------------------------
+# placement-aware tuning
+# ---------------------------------------------------------------------------
+
+
+def test_placement_candidate_prefers_fast_then_near_free_ep():
+    layers = network_layers("synthnet")
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    )
+    conf = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3", n_stages=4
+    ).result.best_conf
+    slowest = 1
+    cand = placement_candidate(conf, slowest, plat)
+    assert cand is not None and cand not in conf.eps
+    # FEPs are 0..3: a free FEP always outranks any free SEP
+    free_feps = [e for e in range(4) if e not in conf.eps]
+    if free_feps:
+        assert cand in free_feps
+
+
+def test_placement_moves_rescue_a_congested_bottleneck():
+    """With the row-0 links congested, the placement-enabled tuner must find
+    a strictly better schedule than boundary moves alone (same warm start)."""
+    layers = network_layers("synthnet")
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    )
+    bg = tuple(
+        Flow(src=s, dst=d, nbytes=2e6, nodes=True)
+        for s, d in ((0, 1), (1, 2), (2, 3), (0, 3))
+    )
+    incumbent = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3"
+    ).result.best_conf
+
+    def retune(placement):
+        ev = DatabaseEvaluator(plat, layers)
+        ev.background_flows = bg
+        return tune(incumbent, Trace(ev), placement=placement)
+
+    gt = DatabaseEvaluator(plat, layers)
+    gt.background_flows = bg
+    boundary_only = gt.throughput(retune(False).best_conf)
+    with_placement = gt.throughput(retune(True).best_conf)
+    assert with_placement > boundary_only
+
+
+def test_tune_without_placement_is_unchanged_by_the_flag_default():
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    a = run_shisha(weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3")
+    b = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3", placement=False
+    )
+    assert a.result == b.result
+    assert a.trace.n_trials == b.trace.n_trials
+
+
+# ---------------------------------------------------------------------------
+# evaluator-level contention
+# ---------------------------------------------------------------------------
+
+
+def test_background_flows_only_slow_stages_that_share_links():
+    layers = network_layers("synthnet")
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    )
+    ev = AnalyticEvaluator(plat, layers)
+    conf = run_shisha(weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3").result.best_conf
+    base = ev.stage_times(conf)
+    ev.background_flows = (Flow(0, 1, 1e7, nodes=True),)
+    congested = ev.stage_times(conf)
+    assert all(c >= b - 1e-15 for b, c in zip(base, congested))
+    assert any(c > b for b, c in zip(base, congested)), (
+        "congestion on a used link must show up in some stage time"
+    )
+    assert math.isclose(
+        1.0 / max(congested), ev.throughput(conf), rel_tol=1e-12
+    )

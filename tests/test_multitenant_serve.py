@@ -208,6 +208,60 @@ def test_global_slowdown_lands_on_owner_lane(plat, tenants):
     assert res.repartitions == []  # slowdowns do not re-partition
 
 
+def test_revived_ep_rejoins_exactly_one_tenant(plat, tenants):
+    """Revival-aware elasticity: after a dropout is rebalanced away, the
+    revived global EP is offered via the ElasticPartitioner pricing and
+    rejoins exactly one tenant's partition (with a charged re-tune)."""
+    res = _co_serve(
+        plat,
+        tenants,
+        elastic=True,
+        faults=[("dropout", FAULT_T, 0), ("revival", 2 * FAULT_T, 0)],
+    )
+    kinds = [e.kind for e in res.repartitions]
+    assert kinds == ["dropout", "revival"], kinds
+    revival = res.repartitions[-1]
+    assert revival.stolen_ep == 0 and revival.donor is None
+    owners = [name for name, part in res.partitions.items() if 0 in part]
+    assert len(owners) == 1, f"revived EP owned by {owners}"
+    assert owners == [revival.victim]
+    assert 0 not in res.dead
+    # the grant is a real partition change: the winner paid exploration time
+    assert set(revival.retune_costs) == {revival.victim}
+    assert revival.retune_costs[revival.victim] > 0
+    # partition invariants hold after the revival too
+    owned = [ep for part in res.partitions.values() for ep in part]
+    assert len(owned) == len(set(owned))
+    assert set(owned) == set(range(plat.n_eps))
+    # conservation across the extra reconfig
+    for r in res.results:
+        assert r.sim.n_arrived == (
+            r.sim.n_completed + r.sim.n_in_flight + r.sim.n_queued
+        )
+
+
+def test_revival_inside_repartition_window_is_not_orphaned(plat, tenants):
+    """Regression: a revival landing *during* the dropout's exploration
+    window (the ex-victim still serves on the EP until install) must still
+    be re-granted — allocation truth, not installed truth, decides."""
+    res = _co_serve(
+        plat,
+        tenants,
+        elastic=True,
+        # the dropout's re-partition is decided at the first monitor tick
+        # after FAULT_T and its install lands a full exploration window
+        # later (several seconds at measure_batches=2); +2s is inside it
+        faults=[("dropout", FAULT_T, 0), ("revival", FAULT_T + 2.0, 0)],
+    )
+    assert 0 not in res.dead
+    owned = [ep for part in res.partitions.values() for ep in part]
+    assert len(owned) == len(set(owned))
+    assert set(owned) == set(range(plat.n_eps)), (
+        f"revived EP was orphaned: partitions cover {sorted(owned)}"
+    )
+    assert [e.kind for e in res.repartitions] == ["dropout", "revival"]
+
+
 def test_co_schedule_keeps_fixed_partitions(plat, tenants):
     rows = co_schedule(plat, tenants, horizon=60.0)
     parts = partition_eps(plat, 2, "interleaved")

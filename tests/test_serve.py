@@ -18,6 +18,7 @@ from repro.serve import (
     drifted_platform,
     partition_eps,
     percentile,
+    interarrival_cv2,
     slo_violation_rate,
     subplatform,
     tune_batch_policy,
@@ -417,3 +418,76 @@ def test_blocked_partition_skewed_shares_keeps_all_tenants():
     # the dominant share still gets the biggest block
     parts = partition_eps(plat, 3, "blocked", shares=[1000.0, 1.0, 1.0])
     assert len(parts[0]) > len(parts[1])
+
+
+# ---------------------------------------------------------------------------
+# MMPP calibration (ReplayTraffic.fit_mmpp)
+# ---------------------------------------------------------------------------
+
+
+def test_fit_mmpp_round_trips_a_synthetic_mmpp():
+    """Moments fit on a recorded MMPP recovers rates and sojourns."""
+    true = MMPPTraffic(rate_low=4.0, rate_high=40.0, mean_calm=6.0, mean_burst=1.5, seed=3)
+    trace = ReplayTraffic.record(true, 3000.0)
+    assert interarrival_cv2(trace.times) > 1.5  # visibly bursty
+    fit = trace.fit_mmpp(horizon=3000.0)
+    assert fit.rate_low == pytest.approx(true.rate_low, rel=0.35)
+    assert fit.rate_high == pytest.approx(true.rate_high, rel=0.35)
+    assert fit.mean_calm == pytest.approx(true.mean_calm, rel=0.6)
+    assert fit.mean_burst == pytest.approx(true.mean_burst, rel=0.6)
+    # the calibrated process reproduces the recording's mean rate
+    n_true = len(trace.times)
+    n_fit = len(fit.arrivals(3000.0))
+    assert n_fit == pytest.approx(n_true, rel=0.25)
+
+
+def test_fit_mmpp_degenerates_on_poisson_traffic():
+    """A memoryless trace (CV^2 ~ 1) must fit to a flat two-state process."""
+    trace = ReplayTraffic.record(PoissonTraffic(rate=10.0, seed=1), 2000.0)
+    assert interarrival_cv2(trace.times) == pytest.approx(1.0, abs=0.1)
+    fit = trace.fit_mmpp(horizon=2000.0)
+    assert fit.rate_low == fit.rate_high == pytest.approx(10.0, rel=0.1)
+
+
+def test_fit_mmpp_is_deterministic_and_handles_tiny_traces():
+    trace = ReplayTraffic.record(
+        MMPPTraffic(rate_low=2.0, rate_high=30.0, seed=7), 500.0
+    )
+    a, b = trace.fit_mmpp(horizon=500.0), trace.fit_mmpp(horizon=500.0)
+    assert a == b
+    empty = ReplayTraffic(times=())
+    assert empty.fit_mmpp(horizon=10.0).rate_low == 0.0
+    short = ReplayTraffic(times=(0.5, 1.0, 1.5))
+    flat = short.fit_mmpp(horizon=2.0)
+    assert flat.rate_low == flat.rate_high == pytest.approx(1.5)
+
+
+def test_fit_mmpp_default_horizon_keeps_every_arrival():
+    """Regression: T derived from the last timestamp must not drop it."""
+    flat = ReplayTraffic(times=(1.0, 2.0, 3.0, 4.0, 5.0)).fit_mmpp()
+    assert flat.rate_low == flat.rate_high == pytest.approx(1.0)
+    # an explicit horizon is an exclusive bound: later arrivals are cut
+    prefix = ReplayTraffic(times=(1.0, 2.0, 3.0, 4.0, 5.0, 50.0)).fit_mmpp(horizon=5.5)
+    assert prefix.rate_low == prefix.rate_high == pytest.approx(5 / 5.5, rel=0.01)
+
+
+def test_placement_retune_never_trials_a_dead_ep():
+    """Regression: a dropout re-tune with placement moves must not relocate
+    a stage onto the buried dead EP — its near-zero sentinel specs would
+    charge an absurd trial to the exploration window."""
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    tuner = ContinuousShisha(
+        plat,
+        layers,
+        make_evaluator=lambda p: DatabaseEvaluator(p, layers),
+        placement=True,
+        measure_batches=2,
+        alpha=4,
+    )
+    retune = tuner.force_retune(
+        0.0, EPDerates(factors=(1.0,) * 8), frozenset({0}), kind="dropout"
+    )
+    # the exploration wall must be sane (a dead-EP trial would be ~1e19 s)
+    assert retune.tuning_cost < 1e3
+    assert 0 not in retune.conf.eps
