@@ -29,6 +29,7 @@ def main() -> None:
         "fig7": fig7_heuristics.run,
         "fig9": fig9_latency.run,
         "fig9_interconnect": lambda: fig9_interconnect.run(quick=args.quick),
+        "fig9_adaptive": lambda: fig9_interconnect.run_adaptive(quick=args.quick),
         "kernels": kernels_bench.run,
         "roofline": roofline.run,
         "serve_sim": lambda: serve_sim.run(quick=args.quick),

@@ -16,6 +16,11 @@ Stops on the tour:
 5. Tunes contention-blind vs. contention-aware (live co-tenant flow set in
    the model + placement moves) and scores both under the congested ground
    truth — the Fig. 9-style experiment of benchmarks/fig9_interconnect.py.
+6. Flips the same fabric to routing="adaptive": the identical schedule's
+   boundary transfers detour around the hammered row, strictly lowering the
+   beat — and an express channel (a heterogeneous link XY routing cannot
+   use) widens the gap.  Also prices a placement trial at its routed
+   hop-priced weight-shipping cost (benchmarks/fig9_adaptive).
 """
 
 from repro.core import DatabaseEvaluator, Trace, paper_platform, weights
@@ -83,3 +88,36 @@ gt.background_flows = congestor
 print(f"[tune ] co-tenant hammers the FEP-row links {list(congestor_pairs)}")
 print(f"[tune ] contention-blind: {blind.pretty()} -> {gt.throughput(blind):.3f}/s under congestion")
 print(f"[tune ] contention-aware: {aware.pretty()} -> {gt.throughput(aware):.3f}/s under congestion")
+
+# -- 6. adaptive congestion-aware routing ------------------------------------
+
+from repro.core.tuner import placement_reconfig_cost
+from repro.interconnect import mesh2d as _mesh2d
+
+adaptive_plat = base.with_fabric(mesh.with_routing("adaptive"))
+ev_a = DatabaseEvaluator(adaptive_plat, layers)
+ev_a.background_flows = congestor
+beat_static, beat_adaptive = max(gt.stage_times(blind)), max(ev_a.stage_times(blind))
+print(
+    f"[route] same schedule, same flows: static beat {beat_static * 1e3:.1f}ms "
+    f"-> adaptive beat {beat_adaptive * 1e3:.1f}ms (flows detour via row 1)"
+)
+express = base.with_fabric(
+    uniform_fabric(
+        _mesh2d(2, 4, bw=1e8, latency=1e-6, express_bw=2e8), routing="adaptive"
+    )
+)
+ev_x = DatabaseEvaluator(express, layers)
+ev_x.background_flows = congestor
+print(
+    f"[route] + row express channels (2x bw, invisible to XY): "
+    f"adaptive beat {max(ev_x.stage_times(blind)) * 1e3:.1f}ms"
+)
+trace = Trace(DatabaseEvaluator(plat, layers))
+far_ep = max(range(8), key=lambda e: len(mesh.route_ep(blind.eps[0], e)))
+print(
+    f"[price] relocating stage 0 ({blind.stages[0]} layers) to EP{far_ep} "
+    f"({len(mesh.route_ep(blind.eps[0], far_ep))} hops) costs the trial "
+    f"{placement_reconfig_cost(trace, blind, 0, far_ep) * 1e3:.1f}ms vs the flat "
+    f"{trace.reconfig_overhead * 1e3:.1f}ms — distant chiplets are expensive to even try"
+)

@@ -31,10 +31,13 @@ from typing import Sequence
 class Layer:
     """One schedulable unit of the network chain.
 
-    ``flops``      — forward FLOPs for one inference unit (image/microbatch).
-    ``bytes_mem``  — bytes moved from the EP's memory (weights + act streams).
-    ``act_bytes``  — output-activation bytes shipped to the next stage
-                     (inter-EP traffic when a stage boundary falls here).
+    ``flops``        — forward FLOPs for one inference unit (image/microbatch).
+    ``bytes_mem``    — bytes moved from the EP's memory (weights + act streams).
+    ``act_bytes``    — output-activation bytes shipped to the next stage
+                       (inter-EP traffic when a stage boundary falls here).
+    ``weight_bytes`` — resident parameter bytes; what a placement move must
+                       ship over the fabric when the layer's stage is
+                       relocated to another EP (hop-priced reconfiguration).
     """
 
     name: str
@@ -42,6 +45,7 @@ class Layer:
     bytes_mem: float
     act_bytes: float
     kind: str = "conv"
+    weight_bytes: float = 0.0
 
     @property
     def weight(self) -> float:
@@ -82,6 +86,7 @@ def conv_layer(
         bytes_mem=weight_bytes + in_bytes + out_bytes + im2col_bytes,
         act_bytes=out_bytes,
         kind="conv",
+        weight_bytes=weight_bytes,
     )
 
 
@@ -115,6 +120,7 @@ def attention_layer(
         bytes_mem=w_bytes + 4 * act,
         act_bytes=act,
         kind="attn",
+        weight_bytes=w_bytes,
     )
 
 
@@ -142,7 +148,7 @@ def ffn_layer(
         w_bytes = mats * d_model * d_ff * dtype_bytes
         kind = "ffn"
     act = t * d_model * dtype_bytes
-    return Layer(name=name, flops=flops, bytes_mem=w_bytes + 4 * act, act_bytes=act, kind=kind)
+    return Layer(name=name, flops=flops, bytes_mem=w_bytes + 4 * act, act_bytes=act, kind=kind, weight_bytes=w_bytes)
 
 
 def ssd_layer(
@@ -162,7 +168,7 @@ def ssd_layer(
     scan = 2.0 * t * d_inner * ssm_state * 3  # B-expand, state update, C-contract
     w_bytes = (3 * d_model * d_inner + d_inner * ssm_state * 2) * dtype_bytes
     act = t * d_model * dtype_bytes
-    return Layer(name=name, flops=proj + scan, bytes_mem=w_bytes + 4 * act, act_bytes=act, kind="ssd")
+    return Layer(name=name, flops=proj + scan, bytes_mem=w_bytes + 4 * act, act_bytes=act, kind="ssd", weight_bytes=w_bytes)
 
 
 def fuse(name: str, layers: Sequence[Layer], kind: str = "block") -> Layer:
@@ -173,6 +179,7 @@ def fuse(name: str, layers: Sequence[Layer], kind: str = "block") -> Layer:
         bytes_mem=sum(l.bytes_mem for l in layers),
         act_bytes=layers[-1].act_bytes,
         kind=kind,
+        weight_bytes=sum(l.weight_bytes for l in layers),
     )
 
 

@@ -210,13 +210,25 @@ class Trace:
     def n_trials(self) -> int:
         return len(self.trials)
 
-    def execute(self, conf: PipelineConfig) -> float:
-        """Measure throughput of ``conf``, paying the simulated cost."""
+    def execute(self, conf: PipelineConfig, reconfig_cost: float | None = None) -> float:
+        """Measure throughput of ``conf``, paying the simulated cost.
+
+        ``reconfig_cost`` overrides the flat ``reconfig_overhead`` for this
+        one trial — how placement-aware tuning charges an EP-relocation its
+        routed weight-shipping cost (hops x stage weight bytes over the
+        fabric) instead of the flat boundary-move price.  ``None`` keeps the
+        flat charge, so every pre-placement exploration path is bit-for-bit
+        unchanged.  A ``use_cache`` hit stays entirely free by its existing
+        contract (no wall charge, no trial) — the override, like the flat
+        overhead it replaces, is only paid when the trial actually runs.
+        """
         if self.use_cache and conf in self._cache:
             return self._cache[conf]
         beat = max(self.evaluator.stage_times(conf))
         fill = self.evaluator.pipeline_latency(conf)
-        self._wall += self.reconfig_overhead + fill + self.measure_batches * beat
+        if reconfig_cost is None:
+            reconfig_cost = self.reconfig_overhead
+        self._wall += reconfig_cost + fill + self.measure_batches * beat
         tp = self.evaluator.throughput(conf)
         if self.use_cache:
             self._cache[conf] = tp

@@ -115,7 +115,24 @@ class Platform:
         )
 
     def with_fabric(self, fabric: "Fabric") -> "Platform":
-        """Copy of the platform with an interconnect fabric attached."""
+        """Copy of the platform with an interconnect fabric attached.
+
+        A fabric whose ``mc_bw`` is the sentinel ``"auto"`` gets its
+        memory-controller hotspot caps resolved here, from the machine the
+        fabric is being attached to: each EP's node is capped at that EP's
+        ``mem_bw`` (the paper's Table 1 memory-module bandwidth), so fan-in
+        onto one chiplet saturates its memory controller by default on the
+        gem5-style platforms.  Nodes hosting several EPs take the smallest;
+        pure router nodes (no EP) stay uncapped.
+        """
+        if isinstance(fabric.mc_bw, str) and fabric.n_eps == len(self.eps):
+            # "auto" (validated by Fabric); a binding-size mismatch falls
+            # through to __post_init__'s clean error below
+            caps: dict[int, float] = {}
+            for i, ep in enumerate(self.eps):
+                node = fabric.ep_nodes[i]
+                caps[node] = min(caps.get(node, ep.mem_bw), ep.mem_bw)
+            fabric = dataclasses.replace(fabric, mc_bw=caps)
         return dataclasses.replace(self, fabric=fabric)
 
     def with_latency(self, latency_s: float) -> "Platform":

@@ -23,9 +23,14 @@ class first, then lowest fabric-routed latency to its pipeline neighbours,
 then FLOPs, then index).  On a platform with an interconnect fabric this is
 what lets the tuner route around congested links — placement on the chiplet
 fabric becomes a first-class decision, not just stage sizing.  The extra
-candidate is charged to the trace like any online trial, so the
-convergence-cost accounting stays honest; with ``placement=False`` the loop
-is exactly the paper's Algorithm 2, trial for trial.
+candidate is charged to the trace like any online trial — at its *routed*
+price: relocating a stage ships its resident weights over the fabric, so
+the trial pays ``reconfig_overhead`` plus a store-and-forward ship of the
+stage's weight bytes across every routed hop beyond the first
+(:func:`placement_reconfig_cost`; a distant EP is expensive to even *try*,
+exactly the online-cost asymmetry Shisha exploits).  With
+``placement=False`` the loop is exactly the paper's Algorithm 2, trial for
+trial.
 """
 
 from __future__ import annotations
@@ -97,6 +102,40 @@ def _relocate(conf: PipelineConfig, stage: int, new_ep: int) -> PipelineConfig:
     eps = list(conf.eps)
     eps[stage] = new_ep
     return PipelineConfig(stages=conf.stages, eps=tuple(eps))
+
+
+def placement_reconfig_cost(
+    trace: Trace, conf: PipelineConfig, stage: int, new_ep: int
+) -> float:
+    """Wall-clock price of trial-relocating ``stage`` onto ``new_ep``.
+
+    A boundary move ships one layer's weights to an adjacent EP — the flat
+    ``reconfig_overhead`` has always modelled that single-link transfer.  A
+    *relocation* ships the whole stage's resident weights across the fabric,
+    so it pays the flat overhead **plus** a store-and-forward ship of the
+    stage's ``weight_bytes`` over every routed hop beyond the first:
+
+        ``overhead + sum_{hops 2..H} (stage_weight_bytes / bw_hop + lat_hop)``
+
+    Weights ship once, as a bulk transfer outside the steady-state flow set,
+    so the *static* route prices it (deterministic, congestion-free).  On a
+    fully-connected fabric every route is one hop and the extra term
+    vanishes — relocation trials cost exactly the old flat overhead, which
+    is the regression pin keeping all pre-fabric placement results
+    bit-for-bit.  Without a fabric there is nothing to route: flat cost.
+    """
+    fabric = trace.evaluator.platform.fabric
+    flat = trace.reconfig_overhead
+    if fabric is None:
+        return flat
+    route = fabric.route_ep(conf.eps[stage], new_ep)
+    if len(route) <= 1:
+        return flat
+    a, b = conf.boundaries()[stage]
+    wbytes = sum(trace.evaluator.layers[i].weight_bytes for i in range(a, b))
+    links = fabric.topology.links
+    extra = sum(wbytes / links[k].bw + links[k].latency for k in route[1:])
+    return flat + extra
 
 
 def placement_candidate(
@@ -178,23 +217,32 @@ def tune(
         steps += 1
         stage_times = trace.evaluator.stage_times(conf)
         slowest = max(range(conf.depth), key=stage_times.__getitem__)
-        candidates: list[PipelineConfig] = []
+        #: (candidate, per-trial reconfig cost — None = flat overhead)
+        candidates: list[tuple[PipelineConfig, float | None]] = []
         target = pick_target(conf, stage_times, slowest, platform, balancing)
         if target is not None:
             direction = 1 if target > slowest else -1
             nxt = _move_toward(conf, slowest, direction)
             if nxt is not None and nxt != conf:
-                candidates.append(nxt)
+                candidates.append((nxt, None))
         if placement:
             new_ep = placement_candidate(conf, slowest, platform, placement_exclude)
             if new_ep is not None:
-                candidates.append(_relocate(conf, slowest, new_ep))
+                # relocation ships the stage's weights across the fabric:
+                # the trial is charged its routed weight-shipping cost, not
+                # the flat boundary-move overhead
+                candidates.append(
+                    (
+                        _relocate(conf, slowest, new_ep),
+                        placement_reconfig_cost(trace, conf, slowest, new_ep),
+                    )
+                )
         if not candidates:
             break  # perfectly balanced, single stage, or nowhere to move
         # every candidate is a paid online trial; ties resolve to the first
         # (boundary move before relocation), keeping the no-placement path
         # identical to the paper's loop
-        measured = [(trace.execute(c), c) for c in candidates]
+        measured = [(trace.execute(c, reconfig_cost=rc), c) for c, rc in candidates]
         tp, conf = max(measured, key=lambda m: m[0])
         if tp <= throughput:
             gamma += 1

@@ -18,6 +18,17 @@ dimension-ordered routing (the standard deadlock-free NoC choice); every
 other topology routes by Dijkstra over (total latency, hop count, lexico-
 graphically smallest node sequence), so ties can never depend on dict or
 heap iteration order.
+
+Links are heterogeneous: every preset can mix fast and slow links in one
+fabric — meshes grow row *express channels* (long-range links skipping
+intermediate routers, as in express-cube NoCs), crossbars take per-port
+uplink bandwidths (a slow port models a chiplet hanging off a previous-gen
+PHY), rings take per-segment bandwidths, and the hierarchical preset keeps
+its intra-/inter-package asymmetry.  Static XY/Dijkstra routing ignores
+bandwidth entirely (it is latency/hop-ordered), so heterogeneous bandwidths
+only matter to the contention pricing — and to the *adaptive* router
+(:class:`~repro.interconnect.fabric.Fabric` with ``routing="adaptive"``),
+which chooses among :meth:`Topology.k_shortest_paths` by congested cost.
 """
 
 from __future__ import annotations
@@ -48,6 +59,11 @@ def _key(u: int, v: int) -> LinkKey:
     if u == v:
         raise ValueError(f"self-link at node {u}")
     return (u, v) if u < v else (v, u)
+
+
+def path_links(path: Sequence[int]) -> tuple[LinkKey, ...]:
+    """The normalized link sequence of a node path (adjacent hops)."""
+    return tuple(_key(a, b) for a, b in zip(path, path[1:]))
 
 
 @dataclasses.dataclass(eq=False)
@@ -81,6 +97,7 @@ class Topology:
         #: node -> sorted neighbour list (sorted: no dict-order dependence)
         self._adj = {n: tuple(sorted(ns)) for n, ns in adj.items()}
         self._routes: dict[tuple[int, int], tuple[LinkKey, ...]] = {}
+        self._kpaths: dict[tuple[int, int, int], tuple[tuple[int, ...], ...]] = {}
 
     def link(self, u: int, v: int) -> Link:
         return self.links[_key(u, v)]
@@ -140,23 +157,93 @@ class Topology:
 
     def _dijkstra_path(self, src: int, dst: int) -> list[int]:
         """Min (latency, hops, lexicographic node sequence) path."""
-        # heap entries are fully ordered tuples, so pop order -- and thereby
-        # the chosen path -- is independent of insertion order
+        found = self._constrained_path(src, dst, frozenset(), frozenset())
+        if found is None:
+            raise ValueError(f"no route {src} -> {dst} in topology {self.name!r}")
+        return list(found)
+
+    def _constrained_path(
+        self,
+        src: int,
+        dst: int,
+        banned_edges: frozenset[LinkKey],
+        banned_nodes: frozenset[int],
+    ) -> tuple[int, ...] | None:
+        """Deterministic Dijkstra avoiding the given edges/nodes (Yen spur).
+
+        Heap entries are fully ordered (latency, hops, path) tuples, so pop
+        order — and thereby the chosen path — is independent of insertion
+        order.
+        """
         heap: list[tuple[float, int, tuple[int, ...]]] = [(0.0, 0, (src,))]
         done: set[int] = set()
         while heap:
             lat, hops, path = heapq.heappop(heap)
             node = path[-1]
             if node == dst:
-                return list(path)
+                return path
             if node in done:
                 continue
             done.add(node)
             for nxt in self._adj[node]:
-                if nxt not in done:
-                    l = self.links[_key(node, nxt)]
-                    heapq.heappush(heap, (lat + l.latency, hops + 1, path + (nxt,)))
-        raise ValueError(f"no route {src} -> {dst} in topology {self.name!r}")
+                if nxt in done or nxt in banned_nodes:
+                    continue
+                k = _key(node, nxt)
+                if k in banned_edges:
+                    continue
+                l = self.links[k]
+                heapq.heappush(heap, (lat + l.latency, hops + 1, path + (nxt,)))
+        return None
+
+    def _path_cost(self, path: Sequence[int]) -> tuple[float, int, tuple[int, ...]]:
+        lat = sum(self.links[_key(a, b)].latency for a, b in zip(path, path[1:]))
+        return (lat, len(path) - 1, tuple(path))
+
+    def k_shortest_paths(self, src: int, dst: int, k: int) -> tuple[tuple[int, ...], ...]:
+        """Up to ``k`` loopless paths ``src`` -> ``dst``, cheapest first.
+
+        Yen's algorithm over the same deterministic (latency, hops,
+        lexicographic node sequence) order as :meth:`route`'s Dijkstra, so
+        the enumeration is a pure function of the topology: identical
+        topologies yield identical path lists in identical order — the
+        foundation of the adaptive router's determinism contract.  Paths
+        include express/shortcut links XY routing never takes.  Cached.
+        """
+        if src == dst:
+            return ((src,),)
+        if k < 1:
+            raise ValueError(f"need k >= 1 paths, got {k}")
+        key = (src, dst, k)
+        if key not in self._kpaths:
+            first = self._constrained_path(src, dst, frozenset(), frozenset())
+            if first is None:
+                raise ValueError(f"no route {src} -> {dst} in topology {self.name!r}")
+            paths: list[tuple[int, ...]] = [first]
+            # candidate heap of (cost, path); costs are fully ordered tuples
+            cands: list[tuple[tuple[float, int, tuple[int, ...]], tuple[int, ...]]] = []
+            seen = {first}
+            while len(paths) < k:
+                prev = paths[-1]
+                for i in range(len(prev) - 1):
+                    spur, root = prev[i], prev[: i + 1]
+                    banned_edges = frozenset(
+                        _key(p[i], p[i + 1])
+                        for p in paths
+                        if len(p) > i + 1 and p[: i + 1] == root
+                    )
+                    banned_nodes = frozenset(root[:-1])
+                    tail = self._constrained_path(spur, dst, banned_edges, banned_nodes)
+                    if tail is None:
+                        continue
+                    cand = root[:-1] + tail
+                    if cand not in seen:
+                        seen.add(cand)
+                        heapq.heappush(cands, (self._path_cost(cand), cand))
+                if not cands:
+                    break
+                paths.append(heapq.heappop(cands)[1])
+            self._kpaths[key] = tuple(paths)
+        return self._kpaths[key]
 
     # -- derived topologies ---------------------------------------------------
 
@@ -166,6 +253,22 @@ class Topology:
             name=f"{self.name}@lat{latency_s:g}",
             n_nodes=self.n_nodes,
             links={k: dataclasses.replace(l, latency=latency_s) for k, l in self.links.items()},
+            coords=self.coords,
+        )
+
+    def with_scaled_bw(self, factor: float) -> "Topology":
+        """Copy with every link's bandwidth multiplied by ``factor``.
+
+        Preserves heterogeneity (a 2x-faster fabric is still the same mix of
+        fast and slow links); the metamorphic contract is that scaling every
+        bandwidth up can never *increase* any contention-priced transfer.
+        """
+        if factor <= 0:
+            raise ValueError(f"bandwidth scale factor must be positive, got {factor}")
+        return Topology(
+            name=f"{self.name}@bwx{factor:g}",
+            n_nodes=self.n_nodes,
+            links={k: dataclasses.replace(l, bw=l.bw * factor) for k, l in self.links.items()},
             coords=self.coords,
         )
 
@@ -183,8 +286,26 @@ def fully_connected(
     return Topology(name=name, n_nodes=n, links=links)
 
 
-def mesh2d(rows: int, cols: int, bw: float = 25e9, latency: float = 100e-9) -> Topology:
-    """``rows x cols`` 2D mesh with XY routing (node = r * cols + c)."""
+def mesh2d(
+    rows: int,
+    cols: int,
+    bw: float = 25e9,
+    latency: float = 100e-9,
+    *,
+    express_bw: float | None = None,
+    express_latency: float | None = None,
+    express_stride: int = 2,
+) -> Topology:
+    """``rows x cols`` 2D mesh with XY routing (node = r * cols + c).
+
+    ``express_bw`` adds *express channels* along every row: extra links
+    joining nodes ``express_stride`` columns apart (express-cube NoC style),
+    with their own bandwidth/latency — per-link heterogeneity inside one
+    mesh.  XY dimension-ordered routing walks unit grid steps only, so the
+    static route never uses an express link and stays bit-for-bit what it
+    was without them; only the adaptive router (and explicit
+    :meth:`Topology.k_shortest_paths` callers) can exploit them.
+    """
     links: dict[LinkKey, Link] = {}
     coords: dict[int, tuple[int, int]] = {}
     for r in range(rows):
@@ -195,24 +316,71 @@ def mesh2d(rows: int, cols: int, bw: float = 25e9, latency: float = 100e-9) -> T
                 links[(n, n + 1)] = Link(bw, latency)
             if r + 1 < rows:
                 links[(n, n + cols)] = Link(bw, latency)
-    return Topology(name=f"mesh{rows}x{cols}", n_nodes=rows * cols, links=links, coords=coords)
+    name = f"mesh{rows}x{cols}"
+    if express_bw is not None:
+        if express_stride < 2:
+            raise ValueError(f"express stride must be >= 2, got {express_stride}")
+        e_lat = express_latency if express_latency is not None else latency
+        for r in range(rows):
+            for c in range(cols - express_stride):
+                n = r * cols + c
+                links[(n, n + express_stride)] = Link(express_bw, e_lat)
+        name += f"+x{express_stride}"
+    return Topology(name=name, n_nodes=rows * cols, links=links, coords=coords)
 
 
-def ring(n: int, bw: float = 25e9, latency: float = 100e-9) -> Topology:
-    """Bidirectional ring; routes take the shorter arc (ties: smaller ids)."""
-    links = {(i, (i + 1) % n) if i < (i + 1) % n else ((i + 1) % n, i): Link(bw, latency) for i in range(n)}
+def ring(
+    n: int,
+    bw: float = 25e9,
+    latency: float = 100e-9,
+    *,
+    segment_bws: Sequence[float] | None = None,
+) -> Topology:
+    """Bidirectional ring; routes take the shorter arc (ties: smaller ids).
+
+    ``segment_bws[i]`` overrides the bandwidth of the segment joining node
+    ``i`` to node ``(i + 1) % n`` — a ring with one slow segment is the
+    smallest fabric where congestion-aware routing pays (the long arc around
+    the slow segment can be the cheaper one under load).
+    """
+    if segment_bws is not None:
+        if n < 3:
+            raise ValueError(
+                f"a {n}-node ring collapses to a single link; "
+                "per-segment bandwidths are ambiguous there"
+            )
+        if len(segment_bws) != n:
+            raise ValueError(f"need {n} segment bandwidths, got {len(segment_bws)}")
+    links = {
+        _key(i, (i + 1) % n): Link(segment_bws[i] if segment_bws is not None else bw, latency)
+        for i in range(n)
+    }
     return Topology(name=f"ring{n}", n_nodes=n, links=links)
 
 
-def crossbar(n: int, bw: float = 25e9, latency: float = 100e-9) -> Topology:
+def crossbar(
+    n: int,
+    bw: float = 25e9,
+    latency: float = 100e-9,
+    *,
+    port_bws: Sequence[float] | None = None,
+) -> Topology:
     """A central switch: n ports star-wired to hub node ``n``.
 
     Every port-to-port route is two hops through the hub (each hub link
     carries half the end-to-end latency), and port links are the contention
     points — concurrent flows into one port fair-share its link, which is
-    how a real crossbar's output-port conflicts behave.
+    how a real crossbar's output-port conflicts behave.  ``port_bws[i]``
+    overrides port ``i``'s uplink bandwidth: a slow uplink models a chiplet
+    hanging off a previous-generation PHY, the heterogeneity §2 of the paper
+    puts in the interconnect itself.
     """
-    links = {(i, n): Link(bw, latency / 2.0) for i in range(n)}
+    if port_bws is not None and len(port_bws) != n:
+        raise ValueError(f"need {n} port bandwidths, got {len(port_bws)}")
+    links = {
+        (i, n): Link(port_bws[i] if port_bws is not None else bw, latency / 2.0)
+        for i in range(n)
+    }
     return Topology(name=f"xbar{n}", n_nodes=n + 1, links=links)
 
 

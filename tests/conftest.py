@@ -1,0 +1,26 @@
+"""Shared test configuration.
+
+Hypothesis runs under a *fixed* profile so the property suites are as
+reproducible as everything else in this repo: ``ci`` (the default) is
+derandomized with a bounded example budget and no deadline — identical
+failures on every machine, no flaky time-based aborts.  Set
+``HYPOTHESIS_PROFILE=dev`` locally for a randomized, slightly smaller
+budget when hunting for new counterexamples.
+"""
+
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:  # property tests importorskip; plain suites still run
+    pass
+else:
+    settings.register_profile(
+        "ci",
+        derandomize=True,
+        max_examples=60,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.register_profile("dev", max_examples=30, deadline=None)
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "ci"))

@@ -1,0 +1,250 @@
+"""Property-based fabric/scheduler contract (Hypothesis).
+
+The adaptive router makes routing a *decision*, which is exactly when a
+fixed example suite stops being enough: the contract has to hold over every
+connected topology, every heterogeneous bandwidth assignment and every flow
+multiset, not just the presets the benchmarks use.  Four properties are
+pinned, each the load-bearing assumption of a different consumer:
+
+  * **determinism** — the adaptive assignment is a pure function of
+    (topology, flow multiset, seed): repeated calls and freshly rebuilt
+    identical fabrics agree.  Every evaluator, tuner and the serving
+    co-simulator rely on this for replayable results.
+  * **path validity** — every assigned route is a loopless walk of adjacent
+    links from the flow's source node to its destination node.
+  * **contention monotonicity** (static routing) — adding a flow never
+    lowers any existing flow's priced cost: the fair-share + hotspot model
+    is monotone, which is what makes congestion a conservative signal for
+    the tuner.  (Adaptive routing deliberately trades this per-flow
+    guarantee for the total-cost one below: a re-route triggered by a new
+    flow may relieve a link some third flow sits on.)
+  * **adaptive never worse than static** — on the same flow set the
+    adaptive assignment's *total* priced cost never exceeds all-static
+    (ties keep the static assignment bit-for-bit), so leaving the adaptive
+    router on can never regress a schedule's evaluation.
+
+Runs under the fixed, derandomized Hypothesis profile from ``conftest.py``;
+marked ``slow`` so CI runs it in its own step.
+"""
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.interconnect import Fabric, Flow, Link, Topology
+from repro.interconnect.topology import path_links
+
+#: heterogeneous but well-conditioned link speed grades (bytes/s) and
+#: latency grades (s) — sampled per link, so one topology mixes fast and
+#: slow links, which is the regime the adaptive router exists for
+_BW_GRADES = (1e6, 1e7, 5e7, 1e8, 1e9)
+_LAT_GRADES = (0.0, 1e-7, 1e-6, 1e-4)
+_NBYTES = (1e3, 1e5, 2e6)
+
+_links = st.builds(
+    Link,
+    bw=st.sampled_from(_BW_GRADES),
+    latency=st.sampled_from(_LAT_GRADES),
+)
+
+
+@st.composite
+def topologies(draw) -> Topology:
+    """Random connected topology with heterogeneous links.
+
+    A random spanning tree guarantees connectivity; extra random edges add
+    the alternative paths adaptive routing chooses among.
+    """
+    n = draw(st.integers(min_value=2, max_value=7))
+    links = {}
+    for v in range(1, n):
+        u = draw(st.integers(min_value=0, max_value=v - 1))
+        links[(u, v)] = draw(_links)
+    n_extra = draw(st.integers(min_value=0, max_value=2 * n))
+    for _ in range(n_extra):
+        a = draw(st.integers(min_value=0, max_value=n - 1))
+        b = draw(st.integers(min_value=0, max_value=n - 1))
+        if a != b:
+            links[(min(a, b), max(a, b))] = draw(_links)
+    return Topology(name=f"rand{n}", n_nodes=n, links=links)
+
+
+@st.composite
+def fabric_and_flows(draw) -> tuple[Topology, list[Flow]]:
+    topo = draw(topologies())
+    n_flows = draw(st.integers(min_value=1, max_value=8))
+    flows = []
+    for _ in range(n_flows):
+        s = draw(st.integers(min_value=0, max_value=topo.n_nodes - 1))
+        d = draw(st.integers(min_value=0, max_value=topo.n_nodes - 1))
+        flows.append(
+            Flow(src=s, dst=d, nbytes=draw(st.sampled_from(_NBYTES)), nodes=True)
+        )
+    return topo, flows
+
+
+def _rebuild(topo: Topology) -> Topology:
+    """A structurally identical but fresh Topology (fresh route caches)."""
+    return Topology(
+        name=topo.name,
+        n_nodes=topo.n_nodes,
+        links=dict(topo.links),
+        coords=dict(topo.coords) if topo.coords is not None else None,
+    )
+
+
+def _fabric(topo: Topology, routing: str, seed: int = 0) -> Fabric:
+    return Fabric(
+        topology=topo,
+        ep_nodes=tuple(range(topo.n_nodes)),
+        routing=routing,
+        seed=seed,
+    )
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+
+@given(fabric_and_flows(), st.sampled_from([0, 7]))
+@settings(max_examples=60)
+def test_adaptive_assignment_is_deterministic(tf, seed):
+    topo, flows = tf
+    fab = _fabric(topo, "adaptive", seed)
+    first = fab.route_flows(flows)
+    assert fab.route_flows(flows) == first, "assignment changed between calls"
+    assert fab.flow_times(flows) == fab.flow_times(flows)
+    rebuilt = _fabric(_rebuild(topo), "adaptive", seed)
+    assert rebuilt.route_flows(flows) == first, "assignment differs across instances"
+
+
+@given(fabric_and_flows(), st.randoms(use_true_random=False))
+@settings(max_examples=60)
+def test_adaptive_assignment_is_a_function_of_the_flow_multiset(tf, rnd):
+    """Reordering the flow list must not change any flow's route or price:
+    the sweep visits flows in canonical identity order and tie-breaks hash
+    the flow's identity, not its list position."""
+    topo, flows = tf
+    fab = _fabric(topo, "adaptive")
+    perm = list(range(len(flows)))
+    rnd.shuffle(perm)
+    shuffled = [flows[i] for i in perm]
+    routes, times = fab.route_flows(flows), fab.flow_times(flows)
+    p_routes, p_times = fab.route_flows(shuffled), fab.flow_times(shuffled)
+
+    def identity(f):
+        return (f.src, f.dst, f.nbytes)
+
+    # exact duplicates are mutually interchangeable, so the invariant is on
+    # the multiset of (flow identity, route, price) triples ...
+    assert sorted(zip(map(identity, flows), routes, times)) == sorted(
+        zip(map(identity, shuffled), p_routes, p_times)
+    )
+    # ... which collapses to exact per-position equality when identities
+    # are unique
+    if len(set(map(identity, flows))) == len(flows):
+        for j, i in enumerate(perm):
+            assert p_routes[j] == routes[i] and p_times[j] == times[i]
+
+
+# ---------------------------------------------------------------------------
+# path validity
+# ---------------------------------------------------------------------------
+
+
+def _assert_valid_walk(route, src, dst, topo):
+    if src == dst:
+        assert route == ()
+        return
+    node, visited = src, {src}
+    for (u, v) in route:
+        assert (u, v) in topo.links, f"route uses non-link {(u, v)}"
+        assert node in (u, v), f"route {route} breaks at {node}"
+        node = v if node == u else u
+        assert node not in visited, f"route {route} revisits {node} (cycle)"
+        visited.add(node)
+    assert node == dst, f"route {route} ends at {node}, not {dst}"
+
+
+@given(fabric_and_flows())
+@settings(max_examples=60)
+def test_adaptive_routes_are_valid_loopless_walks(tf):
+    topo, flows = tf
+    for routing in ("static", "adaptive"):
+        fab = _fabric(topo, routing)
+        for f, route in zip(flows, fab.route_flows(flows)):
+            _assert_valid_walk(route, f.src, f.dst, topo)
+
+
+@given(topologies(), st.integers(min_value=1, max_value=5))
+@settings(max_examples=60)
+def test_k_shortest_paths_are_simple_sorted_and_start_with_the_shortest(topo, k):
+    for s in range(topo.n_nodes):
+        for d in range(topo.n_nodes):
+            if s == d:
+                continue
+            paths = topo.k_shortest_paths(s, d, k)
+            assert 1 <= len(paths) <= k
+            assert len(set(paths)) == len(paths), "duplicate path"
+            costs = []
+            for p in paths:
+                assert p[0] == s and p[-1] == d
+                assert len(set(p)) == len(p), f"path {p} has a cycle"
+                _assert_valid_walk(path_links(p), s, d, topo)
+                costs.append(topo._path_cost(p))
+            assert costs == sorted(costs), "paths not in deterministic cost order"
+            # the enumeration's head agrees with Dijkstra's shortest path
+            assert costs[0][0] <= topo.path_latency(s, d) + 1e-15
+
+
+# ---------------------------------------------------------------------------
+# contention monotonicity (static routing)
+# ---------------------------------------------------------------------------
+
+
+@given(fabric_and_flows())
+@settings(max_examples=60)
+def test_static_contention_monotone_adding_a_flow_never_speeds_anyone_up(tf):
+    topo, flows = tf
+    fab = _fabric(topo, "static")
+    for cut in range(1, len(flows)):
+        before = fab.flow_times(flows[:cut])
+        after = fab.flow_times(flows[: cut + 1])
+        for i, (b, a) in enumerate(zip(before, after)):
+            assert a >= b - 1e-12 * max(1.0, b), (
+                f"flow {i} sped up from {b} to {a} when flow {cut} was added"
+            )
+
+
+# ---------------------------------------------------------------------------
+# adaptive never worse than static
+# ---------------------------------------------------------------------------
+
+
+@given(fabric_and_flows(), st.sampled_from([0, 3, 11]))
+@settings(max_examples=60)
+def test_adaptive_total_cost_never_exceeds_static(tf, seed):
+    topo, flows = tf
+    static_total = sum(_fabric(topo, "static").flow_times(flows))
+    adaptive_total = sum(_fabric(topo, "adaptive", seed).flow_times(flows))
+    assert adaptive_total <= static_total, (
+        f"adaptive ({adaptive_total}) priced worse than static ({static_total})"
+    )
+
+
+@given(fabric_and_flows())
+@settings(max_examples=30)
+def test_adaptive_tie_keeps_the_static_assignment(tf):
+    """When adaptive finds nothing strictly better it must return the static
+    assignment *itself* (not an equal-cost rearrangement), so turning the
+    router on is bit-for-bit free whenever it has nothing to offer."""
+    topo, flows = tf
+    static = _fabric(topo, "static")
+    adaptive = _fabric(topo, "adaptive")
+    s_routes, a_routes = static.route_flows(flows), adaptive.route_flows(flows)
+    if sum(adaptive.flow_times(flows)) == sum(static.flow_times(flows)):
+        assert a_routes == s_routes

@@ -8,8 +8,23 @@ are guarded hard:
   * degenerate equivalence — a fully-connected fabric built from the EP
     scalar link specs reproduces the pre-fabric evaluator bit-for-bit;
   * contention monotonicity — adding a flow never speeds up existing flows.
+
+Plus the adaptive-routing and hop-priced-reconfiguration contracts
+(metamorphic forms; the randomized versions live in
+``tests/test_fabric_properties.py``):
+
+  * adaptive routing strictly beats static on the congested mesh under an
+    identical schedule, and never prices a flow set worse in total;
+  * doubling every link bandwidth never increases an evaluated beat;
+  * zero-byte activations make the topology choice irrelevant;
+  * hop-priced placement trials reduce to the old flat ``reconfig_overhead``
+    on a fully-connected fabric (the PR-1/2/3 regression pin) and charge
+    multi-hop relocations more;
+  * ``mc_bw="auto"`` turns the memory-controller hotspot on from EP
+    ``mem_bw`` for the gem5-style preset platforms.
 """
 
+import dataclasses
 import math
 
 import pytest
@@ -22,7 +37,8 @@ from repro.core import (
     weights,
 )
 from repro.core.heuristics import run_shisha
-from repro.core.tuner import placement_candidate, tune
+from repro.core.platform import table3_platform
+from repro.core.tuner import placement_candidate, placement_reconfig_cost, tune
 from repro.interconnect import (
     Flow,
     crossbar,
@@ -269,6 +285,223 @@ def test_tune_without_placement_is_unchanged_by_the_flag_default():
     )
     assert a.result == b.result
     assert a.trace.n_trials == b.trace.n_trials
+
+
+# ---------------------------------------------------------------------------
+# adaptive congestion-aware routing
+# ---------------------------------------------------------------------------
+
+
+def _congestor():
+    return tuple(
+        Flow(src=s, dst=d, nbytes=2e6, nodes=True)
+        for s, d in ((0, 1), (1, 2), (2, 3), (0, 3))
+    )
+
+
+def test_adaptive_routing_strictly_beats_static_on_the_congested_mesh():
+    """The fig9_adaptive acceptance cell: same schedule, same flows — the
+    routing layer alone must lower the beat by detouring around the
+    hammered row-0 links."""
+    layers = network_layers("synthnet")
+    fab = uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    plat_s = paper_platform(8).with_fabric(fab)
+    plat_a = paper_platform(8).with_fabric(fab.with_routing("adaptive"))
+    conf = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat_s, layers)), "H3"
+    ).result.best_conf
+    beats = {}
+    for name, plat in (("static", plat_s), ("adaptive", plat_a)):
+        ev = DatabaseEvaluator(plat, layers)
+        ev.background_flows = _congestor()
+        beats[name] = max(ev.stage_times(conf))
+    assert beats["adaptive"] < beats["static"]
+
+
+def test_adaptive_rerouting_relieves_a_congested_row():
+    fab = uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6), mc_bw=None)
+    flows = [Flow(1, 2, 1e6)] + list(_congestor())
+    static_t = fab.flow_times(flows)
+    adaptive = fab.with_routing("adaptive")
+    adaptive_t = adaptive.flow_times(flows)
+    assert sum(adaptive_t) < sum(static_t)
+    # some flow detoured off the hammered row-0 links: their total load drops
+    row0 = {(0, 1), (1, 2), (2, 3)}
+
+    def row0_load(routes):
+        return sum(1 for r in routes for k in r if k in row0)
+
+    assert row0_load(adaptive.route_flows(flows)) < row0_load(fab.route_flows(flows))
+
+
+def test_express_links_invisible_to_xy_but_exploited_by_adaptive():
+    topo = mesh2d(2, 4, bw=1e8, latency=1e-6, express_bw=2e8)
+    assert (0, 2) in topo.links  # the express channel exists ...
+    assert topo.route(0, 2) == ((0, 1), (1, 2))  # ... but XY never takes it
+    fab = uniform_fabric(topo, mc_bw=None).with_routing("adaptive")
+    route = fab.route_flows([Flow(0, 2, 1e6)])[0]
+    assert route == ((0, 2),)  # one express hop: cheaper in latency and bw
+
+
+def test_heterogeneous_preset_links():
+    xbar = crossbar(4, bw=1e8, latency=1e-6, port_bws=[1e8, 1e8, 2.5e7, 1e8])
+    assert xbar.link(2, 4).bw == 2.5e7 and xbar.link(0, 4).bw == 1e8
+    rg = ring(4, bw=1e8, latency=1e-6, segment_bws=[1e8, 1e8, 1e8, 2.5e7])
+    assert rg.link(3, 0).bw == 2.5e7 and rg.link(0, 1).bw == 1e8
+    hier = hierarchical(2, 2)
+    assert hier.link(0, 1).bw > hier.link(0, 2).bw  # intra faster than inter
+
+
+def test_doubling_every_link_bandwidth_never_increases_the_beat():
+    layers = network_layers("synthnet")
+    topo = mesh2d(2, 4, bw=1e8, latency=1e-6)
+    conf = run_shisha(
+        weights(layers),
+        Trace(DatabaseEvaluator(paper_platform(8).with_fabric(uniform_fabric(topo)), layers)),
+        "H3",
+    ).result.best_conf
+    for routing in ("static", "adaptive"):
+        for factor in (2.0, 4.0):
+            beats = []
+            for t in (topo, topo.with_scaled_bw(factor)):
+                ev = DatabaseEvaluator(
+                    paper_platform(8).with_fabric(uniform_fabric(t, routing=routing)),
+                    layers,
+                )
+                ev.background_flows = _congestor()
+                beats.append(max(ev.stage_times(conf)))
+            assert beats[1] <= beats[0] + 1e-15, (
+                f"{routing}: beat rose from {beats[0]} to {beats[1]} at {factor}x bw"
+            )
+
+
+def test_zero_byte_activations_make_topology_choice_irrelevant():
+    layers = [
+        dataclasses.replace(l, act_bytes=0.0) for l in network_layers("synthnet")
+    ]
+    ref_plat = paper_platform(8).with_latency(0.0)
+    conf = run_shisha(
+        weights(layers), Trace(AnalyticEvaluator(ref_plat, layers)), "H3"
+    ).result.best_conf
+    ref = AnalyticEvaluator(ref_plat, layers).stage_times(conf)
+    fabrics = [
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=0.0)),
+        uniform_fabric(ring(8, bw=1e8, latency=0.0)),
+        uniform_fabric(crossbar(8, bw=1e8, latency=0.0), n_eps=8),
+        uniform_fabric(fully_connected(8, latency=0.0)),
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=0.0), routing="adaptive"),
+    ]
+    for fab in fabrics:
+        plat = paper_platform(8).with_fabric(fab)
+        assert AnalyticEvaluator(plat, layers).stage_times(conf) == ref, (
+            f"zero-byte transfers still depend on topology {fab.topology.name}"
+        )
+
+
+# ---------------------------------------------------------------------------
+# hop-priced placement reconfiguration
+# ---------------------------------------------------------------------------
+
+
+def test_hop_priced_placement_reduces_to_flat_cost_on_fully_connected():
+    """Regression pin for PR-1/2/3: on the degenerate fabric every route is
+    one hop, so placement trials must charge exactly the flat overhead —
+    the whole trace's wall reproduces the pre-hop-pricing arithmetic."""
+    layers = network_layers("synthnet")
+    base = paper_platform(8)
+    plat = base.with_fabric(scalar_fabric(base))
+    trace = Trace(DatabaseEvaluator(plat, layers))
+    run_shisha(weights(layers), trace, "H3", placement=True)
+    ev = DatabaseEvaluator(plat, layers)
+    wall = 0.0
+    for trial in trace.trials:
+        times = ev.stage_times(trial.conf)
+        wall += trace.reconfig_overhead + sum(times) + trace.measure_batches * max(times)
+        assert trial.t_wall == pytest.approx(wall, rel=1e-12)
+    # and the unit-level statement: every relocation is priced flat
+    conf = trace.trials[-1].conf
+    for ep in range(plat.n_eps):
+        if ep not in conf.eps:
+            assert placement_reconfig_cost(trace, conf, 0, ep) == trace.reconfig_overhead
+
+
+def test_hop_priced_placement_charges_multi_hop_relocations_more():
+    layers = network_layers("synthnet")
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    )
+    trace = Trace(DatabaseEvaluator(plat, layers))
+    conf = run_shisha(weights(layers), trace, "H3", n_stages=4).result.best_conf
+    stage = 0
+    src = conf.eps[stage]
+    a, b = conf.boundaries()[stage]
+    wbytes = sum(layers[i].weight_bytes for i in range(a, b))
+    assert wbytes > 0
+    flat = trace.reconfig_overhead
+    free = [e for e in range(plat.n_eps) if e not in conf.eps]
+    costs = {e: placement_reconfig_cost(trace, conf, stage, e) for e in free}
+    for e, cost in costs.items():
+        hops = len(plat.fabric.route_ep(src, e))
+        expected = flat + (hops - 1) * (wbytes / 1e8 + 1e-6)
+        assert cost == pytest.approx(expected, rel=1e-12)
+        if hops > 1:
+            assert cost > flat
+
+
+def test_placement_tuning_prefers_near_over_far_when_throughput_ties():
+    """The hop price is charged to the trace: a placement-enabled tune on a
+    mesh accumulates strictly more wall than the same trials priced flat
+    whenever any relocation crossed more than one hop."""
+    layers = network_layers("synthnet")
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    )
+    ev = DatabaseEvaluator(plat, layers)
+    ev.background_flows = _congestor()
+    trace = Trace(ev)
+    run_shisha(weights(layers), trace, "H3", placement=True)
+    ev2 = DatabaseEvaluator(plat, layers)
+    ev2.background_flows = _congestor()
+    flat_wall = sum(
+        trace.reconfig_overhead
+        + sum(ev2.stage_times(t.conf))
+        + trace.measure_batches * max(ev2.stage_times(t.conf))
+        for t in trace.trials
+    )
+    assert trace.wall >= flat_wall - 1e-12
+
+
+# ---------------------------------------------------------------------------
+# memory-controller hotspot defaults
+# ---------------------------------------------------------------------------
+
+
+def test_mc_bw_defaults_from_ep_mem_bw_on_gem5_presets():
+    plat = table3_platform("C2").with_fabric(uniform_fabric(fully_connected(4)))
+    # paper Table 1: HBM 40 GB/s on the FEPs, DDR 20 GB/s on the SEPs
+    assert plat.fabric.mc_bw == {0: 40e9, 1: 40e9, 2: 20e9, 3: 20e9}
+    # three flows fanning into SEP node 3 over disjoint 25 GB/s links: the
+    # link fair-share alone would give each the full link, but the DDR
+    # controller cap (20e9 / 3) must bind
+    flows = [Flow(i, 3, 1e8) for i in range(3)]
+    capped = plat.fabric.flow_times(flows)
+    free = uniform_fabric(fully_connected(4), mc_bw=None).flow_times(flows)
+    assert capped[0] == pytest.approx(1e8 / (20e9 / 3) + 1e-7)
+    assert free[0] == pytest.approx(1e8 / 25e9 + 1e-7)
+    assert capped[0] > free[0]
+
+
+def test_scalar_fabric_stays_exempt_from_auto_mc_bw():
+    base = table3_platform("C2")
+    assert base.with_fabric(scalar_fabric(base)).fabric.mc_bw is None
+
+
+def test_unattached_auto_fabric_prices_uncapped():
+    fab = uniform_fabric(fully_connected(4))  # "auto", never attached
+    flows = [Flow(i, 3, 1e8) for i in range(3)]
+    assert fab.flow_times(flows) == uniform_fabric(
+        fully_connected(4), mc_bw=None
+    ).flow_times(flows)
 
 
 # ---------------------------------------------------------------------------

@@ -491,3 +491,80 @@ def test_placement_retune_never_trials_a_dead_ep():
     # the exploration wall must be sane (a dead-EP trial would be ~1e19 s)
     assert retune.tuning_cost < 1e3
     assert 0 not in retune.conf.eps
+
+
+# ---------------------------------------------------------------------------
+# fabric metamorphics on the serving layer
+# ---------------------------------------------------------------------------
+
+
+def _mesh_serving(bw_scale: float, routing: str = "static"):
+    """A tuned synthnet lane on a 2x4-mesh fabric, congested by co-tenant
+    flows, with every link bandwidth scaled by ``bw_scale``."""
+    from repro.interconnect import Flow, mesh2d, uniform_fabric
+
+    layers = network_layers("synthnet")
+    topo = mesh2d(2, 4, bw=1e8, latency=1e-6).with_scaled_bw(bw_scale)
+    plat = paper_platform(8).with_fabric(uniform_fabric(topo, routing=routing))
+    ev = DatabaseEvaluator(plat, layers)
+    conf = run_shisha(weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3").result.best_conf
+    sim = ServingSimulator(ev, conf, slo=1.0)
+    sim.set_background_flows(
+        tuple(Flow(s, d, 2e6, nodes=True) for s, d in ((0, 1), (1, 2), (2, 3), (0, 3)))
+    )
+    return sim
+
+
+@pytest.mark.parametrize("routing", ["static", "adaptive"])
+def test_doubling_fabric_bandwidth_never_slows_served_stage_times(routing):
+    """Metamorphic: a uniformly faster fabric can only lower the service
+    times a lane observes — under live co-tenant congestion, in both
+    routing modes (the conf is re-tuned per platform, so compare the
+    slower platform's conf priced on both)."""
+    slow = _mesh_serving(1.0, routing)
+    fast = _mesh_serving(2.0, routing)
+    fast.conf = slow.conf
+    fast._base_times = list(fast.evaluator.stage_times(fast.conf))
+    for t_slow, t_fast in zip(slow.observed_stage_times(), fast.observed_stage_times()):
+        assert t_fast <= t_slow + 1e-15
+
+
+def test_co_serve_on_adaptive_fabric_deterministic_and_diverges_from_static():
+    """The co-simulator re-prices (and, with an adaptive fabric, re-routes)
+    every lane's transfers each monitor window.  Two adaptive runs must be
+    bit-identical; the adaptive arm must diverge from the static arm (the
+    routing decision reaches the served latencies)."""
+    from repro.interconnect import mesh2d, uniform_fabric
+    from repro.serve import Tenant, co_serve
+
+    fab = uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6))
+    layers_a = network_layers("synthnet")
+    layers_b = network_layers("resnet50")
+
+    def arm(routing):
+        plat = paper_platform(8).with_fabric(fab.with_routing(routing))
+        tenants = []
+        for name, layers, seed, slo in (("a", layers_a, 5, 2.5), ("b", layers_b, 6, 1.0)):
+            cap = run_shisha(
+                weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3"
+            ).result.best_throughput
+            tenants.append(
+                Tenant(
+                    name=name,
+                    layers=tuple(layers),
+                    traffic=PoissonTraffic(rate=0.6 * cap, seed=seed),
+                    slo=slo,
+                )
+            )
+        return co_serve(
+            plat, tenants, horizon=20.0, elastic=False, measure_batches=2, alpha=4
+        )
+
+    adaptive_1, adaptive_2 = arm("adaptive"), arm("adaptive")
+    for r1, r2 in zip(adaptive_1.results, adaptive_2.results):
+        assert r1.sim.latencies == r2.sim.latencies, "adaptive co-serve not replayable"
+    static = arm("static")
+    assert any(
+        rs.sim.latencies != ra.sim.latencies
+        for rs, ra in zip(static.results, adaptive_1.results)
+    ), "adaptive routing never reached the served latencies"
