@@ -1,0 +1,195 @@
+"""Self-benchmark: how fast is the simulator itself?
+
+    PYTHONPATH=src python -m benchmarks.selfbench [--quick]
+
+Every other harness measures the *reproduced system* (throughput, SLO rates,
+convergence); this one measures the *simulator* — the only perf trajectory
+worth tracking for the repo's own hot paths:
+
+  * **event_loop** — raw :class:`~repro.serve.simulator.EventLoop` dispatch
+    rate (a no-op owner, heap-only): the ceiling every scenario runs under,
+    measured bare and with a live :class:`~repro.telemetry.Telemetry`
+    session to pin the instrumentation overhead ratio.
+  * **serve** — a real single-tenant :class:`ServingSimulator` scenario
+    (SynthNet, Poisson traffic), simulated-events/sec bare vs telemetry-on;
+    the telemetry arm's wall time also comes from the session's own
+    ``timed("event_loop.run")`` profiling hook, closing the loop on the
+    profiler itself.
+  * **cotenant** — one tenant per EP on the paper's 8-EP platform, all on
+    one shared clock: the peak-tenant-count stress shape, reported as
+    simulated-events/sec at that width.
+
+The headline payload lands in ``BENCH_selfbench.json`` at the repo root
+(committed, so the trajectory is visible in history) and the telemetry arm's
+Chrome trace in ``experiments/telemetry/selfbench_trace.json``.  Wall-clock
+numbers vary run to run, machine to machine; the *simulated* side of every
+arm is deterministic.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+from pathlib import Path
+
+from repro.core import DatabaseEvaluator, Trace, paper_platform, weights
+from repro.core.heuristics import run_shisha
+from repro.models.cnn import network_layers
+from repro.serve import PoissonTraffic, ServingSimulator, Tenant, co_serve
+from repro.serve.simulator import EventLoop
+from repro.telemetry import Telemetry
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+class _NullOwner:
+    """Dispatch target that does nothing: isolates the loop's own cost."""
+
+    def _dispatch(self, t, kind, payload):
+        pass
+
+
+def bench_event_loop(n_events: int, telemetry: Telemetry | None = None) -> dict:
+    owner = _NullOwner()
+    loop = EventLoop(telemetry)
+    for i in range(n_events):
+        loop.push(i * 1e-6, 0, owner, None)
+    t0 = time.perf_counter()
+    loop.run(math.inf)
+    wall = time.perf_counter() - t0
+    return {
+        "n_events": loop.n_dispatched,
+        "wall_s": wall,
+        "events_per_s": loop.n_dispatched / wall if wall > 0 else float("inf"),
+    }
+
+
+def _serve_scenario(horizon: float, telemetry: Telemetry | None):
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    ev = DatabaseEvaluator(plat, layers)
+    sh = run_shisha(weights(layers), Trace(ev), "H3")
+    conf, cap = sh.result.best_conf, sh.result.best_throughput
+    sim = ServingSimulator(ev, conf, slo=3.0, telemetry=telemetry)
+    traffic = PoissonTraffic(rate=0.6 * cap, seed=7)
+    t0 = time.perf_counter()
+    res = sim.run(traffic.arrivals(horizon), horizon)
+    wall = time.perf_counter() - t0
+    return sim, res, wall
+
+
+def bench_serve(horizon: float, telemetry: Telemetry | None = None) -> dict:
+    sim, res, wall = _serve_scenario(horizon, telemetry)
+    return {
+        "horizon_s": horizon,
+        "n_completed": res.n_completed,
+        "sim_events": sim.loop.n_dispatched,
+        "wall_s": wall,
+        "events_per_s": sim.loop.n_dispatched / wall if wall > 0 else float("inf"),
+    }
+
+
+def bench_cotenant(horizon: float, n_tenants: int) -> dict:
+    """One tenant per EP — the widest shape the partitioner admits."""
+    plat = paper_platform(8)
+    layers = tuple(network_layers("alexnet"))
+    cap_ev = DatabaseEvaluator(plat, layers)
+    cap = run_shisha(weights(layers), Trace(cap_ev), "H3").result.best_throughput
+    tenants = [
+        Tenant(
+            name=f"t{i}",
+            layers=layers,
+            traffic=PoissonTraffic(rate=0.3 * cap / n_tenants, seed=100 + i),
+            slo=5.0,
+        )
+        for i in range(n_tenants)
+    ]
+    tl = Telemetry()
+    t0 = time.perf_counter()
+    res = co_serve(plat, tenants, horizon=horizon, elastic=False, telemetry=tl)
+    wall = time.perf_counter() - t0
+    loop_profile = tl.profile_snapshot().get("event_loop.run", {})
+    return {
+        "horizon_s": horizon,
+        "peak_tenants": n_tenants,
+        "n_completed": sum(r.sim.n_completed for r in res.results),
+        "wall_s": wall,
+        "loop_wall_s": loop_profile.get("wall_s"),
+        "completed_per_s": (
+            sum(r.sim.n_completed for r in res.results) / wall if wall > 0 else 0.0
+        ),
+    }
+
+
+def run(verbose: bool = True, quick: bool = False) -> dict:
+    n_events = 50_000 if quick else 200_000
+    horizon = 60.0 if quick else 200.0
+    co_horizon = 20.0 if quick else 60.0
+    n_tenants = 4 if quick else 8
+
+    base_loop = bench_event_loop(n_events)
+    tel_loop = bench_event_loop(n_events, Telemetry())
+    base_serve = bench_serve(horizon)
+    tl = Telemetry()
+    tel_serve = bench_serve(horizon, tl)
+    cotenant = bench_cotenant(co_horizon, n_tenants)
+
+    trace_path = ROOT / "experiments" / "telemetry" / "selfbench_trace.json"
+    tl.export_chrome_trace(trace_path)
+
+    payload = {
+        "bench": "selfbench",
+        "event_loop": {
+            "baseline": base_loop,
+            "telemetry": tel_loop,
+            "overhead_ratio": (
+                base_loop["events_per_s"] / tel_loop["events_per_s"]
+                if tel_loop["events_per_s"] > 0
+                else float("inf")
+            ),
+        },
+        "serve": {
+            "baseline": base_serve,
+            "telemetry": tel_serve,
+            "overhead_ratio": (
+                base_serve["events_per_s"] / tel_serve["events_per_s"]
+                if tel_serve["events_per_s"] > 0
+                else float("inf")
+            ),
+            "profile": tl.profile_snapshot(),
+        },
+        "cotenant": cotenant,
+        "events_per_s": base_serve["events_per_s"],
+        "chrome_trace": str(trace_path.relative_to(ROOT)),
+    }
+    out = ROOT / "BENCH_selfbench.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    if verbose:
+        print(
+            f"  selfbench event_loop: {base_loop['events_per_s']:,.0f} ev/s bare, "
+            f"{tel_loop['events_per_s']:,.0f} ev/s instrumented "
+            f"({payload['event_loop']['overhead_ratio']:.2f}x)"
+        )
+        print(
+            f"  selfbench serve: {base_serve['events_per_s']:,.0f} sim-events/s "
+            f"({base_serve['sim_events']} events over {horizon:.0f}s simulated)"
+        )
+        print(
+            f"  selfbench cotenant: {cotenant['peak_tenants']} tenants, "
+            f"{cotenant['n_completed']} completions in {cotenant['wall_s']:.2f}s wall"
+        )
+        print(f"  selfbench payload -> {out.name}, trace -> {trace_path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="smaller event counts/horizons")
+    args = ap.parse_args()
+    run(verbose=True, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -291,6 +291,7 @@ def multitenant_drift_scenario(quick: bool, verbose: bool) -> dict:
                         "donor": e.donor,
                         "stolen_ep": e.stolen_ep,
                         "price_rps": e.price,
+                        "bundle": [dict(d) for d in e.bundle],
                         "partitions": {k: list(v) for k, v in e.partitions.items()},
                         "retune_wall_costs_s": e.retune_costs,
                     }

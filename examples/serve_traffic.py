@@ -17,6 +17,14 @@ Act 2 — two tenants on one shared clock, EP dropout:
    partitioner prices every donor EP in requests/second of at-risk
    demand and lets SynthNet steal the cheapest one; both affected
    tenants re-tune, paying the full exploration wall-clock.
+
+Act 3 — the same run, through the telemetry lens:
+6. Act 2 ran with a live `Telemetry` session, so every request span,
+   re-tune, fabric flow window, and repartition landed in one timeline.
+   Exports it as Chrome trace-event JSON (open in Perfetto or
+   chrome://tracing — tenants are processes; EPs, the tuner, and the
+   request stream are tracks) and pretty-prints the densest tracks plus
+   the cross-layer metrics registry.
 """
 
 from repro.core import DatabaseEvaluator, Trace, paper_platform, weights
@@ -30,6 +38,7 @@ from repro.serve import (
     Tenant,
     co_serve,
 )
+from repro.telemetry import Telemetry
 
 HORIZON = 300.0
 FAULT_T = 60.0
@@ -86,6 +95,7 @@ tenants = [
         slo=0.8,
     ),
 ]
+tl = Telemetry()
 out = co_serve(
     plat,
     tenants,
@@ -95,6 +105,7 @@ out = co_serve(
     measure_batches=2,
     alpha=4,
     faults=[("dropout", FAULT_T, 0)],  # kill global FEP0 mid-run
+    telemetry=tl,
 )
 for r in out.results:
     print(f"[multi] {r.tenant.name:9s} eps={list(r.ep_idxs)} {r.sim.summary()}")
@@ -108,3 +119,47 @@ for e in out.repartitions:
         price = "unpriced" if e.price is None else f"price {e.price:.2f} req/s at risk"
         deal = f"EP{e.dead_ep} died; {e.victim} stole EP{e.stolen_ep} from {e.donor} ({price})"
     print(f"[elast] t={e.t:.1f}s {deal}; re-tune costs {costs}")
+
+# --- Act 3: the same run, through the telemetry lens -----------------------
+
+print()
+print("[trace] act 2 ran under a live Telemetry session; exporting it")
+trace_path = "experiments/telemetry/serve_traffic_trace.json"
+chrome = tl.export_chrome_trace(trace_path)
+spans = [e for e in chrome["traceEvents"] if e.get("ph") == "X"]
+instants = [e for e in chrome["traceEvents"] if e.get("ph") == "i"]
+print(
+    f"[trace] {len(spans)} spans + {len(instants)} instants -> {trace_path}"
+    " (open in Perfetto / chrome://tracing)"
+)
+
+# densest tracks: which (process, track) pairs carry the timeline
+names = {
+    (e["args"]["name"], e["pid"]): None
+    for e in chrome["traceEvents"]
+    if e.get("ph") == "M" and e["name"] == "process_name"
+}
+pid_name = {pid: proc for (proc, pid) in names}
+by_track: dict = {}
+for e in spans:
+    key = (pid_name.get(e["pid"], e["pid"]), e["name"])
+    calls, dur = by_track.get(key, (0, 0.0))
+    by_track[key] = (calls + 1, dur + e["dur"] / 1e6)
+print("[trace] process/track        spans  busy(sim s)")
+for (proc, name), (calls, dur) in sorted(by_track.items(), key=lambda kv: -kv[1][0])[:8]:
+    print(f"[trace] {proc:>9s}/{name:<12s} {calls:5d}  {dur:8.1f}")
+
+# the cross-layer metrics registry: one line per headline metric
+snap = tl.metrics_snapshot()
+print("[metr ] cross-layer registry highlights:")
+for name in sorted(snap):
+    m = snap[name]
+    if m["kind"] == "counter":
+        print(f"[metr ] {name:<28s} count={m['value']}")
+    elif m["kind"] == "histogram" and (
+        name.endswith("latency_s") or name.startswith(("tune.", "fabric."))
+    ):
+        print(
+            f"[metr ] {name:<28s} n={m['count']:<5d} "
+            f"p50={m['p50']:.4f} p99={m['p99']:.4f}"
+        )

@@ -196,6 +196,10 @@ class Trace:
     #: default: the Fig. 4 cost accounting assumes every visit is paid,
     #: as on real hardware where a revisit still costs pipeline time.
     use_cache: bool = False
+    #: optional :class:`repro.telemetry.Telemetry` session; every *paid*
+    #: trial records its charged wall cost and measured beat (duck-typed so
+    #: ``repro.core`` stays import-free of the telemetry package)
+    telemetry: "object | None" = None
 
     def __post_init__(self):
         self.trials: list[Trial] = []
@@ -228,7 +232,13 @@ class Trace:
         fill = self.evaluator.pipeline_latency(conf)
         if reconfig_cost is None:
             reconfig_cost = self.reconfig_overhead
-        self._wall += reconfig_cost + fill + self.measure_batches * beat
+        charged = reconfig_cost + fill + self.measure_batches * beat
+        self._wall += charged
+        tl = self.telemetry
+        if tl is not None and tl.enabled:
+            tl.counter("tune.trials").inc()
+            tl.histogram("tune.trial_cost_s").observe(charged)
+            tl.histogram("tune.trial_beat_s").observe(beat)
         tp = self.evaluator.throughput(conf)
         if self.use_cache:
             self._cache[conf] = tp

@@ -211,6 +211,12 @@ def tune(
     platform = trace.evaluator.platform
     throughput = trace.execute(conf)
     best_conf, best_tp = conf, throughput
+    #: live telemetry session of the trace, or None (duck-typed; the move
+    #: kind and beat delta of every adopted candidate are the tuner-side
+    #: facts Trace.execute cannot see)
+    tl = getattr(trace, "telemetry", None)
+    if tl is not None and not tl.enabled:
+        tl = None
     gamma = 0
     steps = 0
     while gamma < alpha and steps < max_steps:
@@ -243,7 +249,14 @@ def tune(
         # (boundary move before relocation), keeping the no-placement path
         # identical to the paper's loop
         measured = [(trace.execute(c, reconfig_cost=rc), c) for c, rc in candidates]
-        tp, conf = max(measured, key=lambda m: m[0])
+        chosen = max(range(len(measured)), key=lambda i: (measured[i][0], -i))
+        tp, conf = measured[chosen]
+        if tl is not None:
+            kind = "relocation" if candidates[chosen][1] is not None else "boundary"
+            tl.counter(f"tune.moves.{kind}").inc()
+            tl.histogram("tune.beat_delta_s").observe(
+                1.0 / tp - stage_times[slowest]
+            )
         if tp <= throughput:
             gamma += 1
         else:

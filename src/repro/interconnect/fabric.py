@@ -102,6 +102,13 @@ class Fabric:
     #: keyed hash of (seed, flow endpoints + size, path), so distinct seeds
     #: explore distinct-but-deterministic equilibria
     seed: int = 0
+    #: optional :class:`repro.telemetry.Telemetry` session (duck-typed; the
+    #: serving layers attach theirs).  When live, every routing pass records
+    #: link loads, the fair-share contention factor, memory-controller
+    #: hotspot saturation and — in adaptive mode — the priced
+    #: static-vs-adaptive delta.  ``None`` (the default) records nothing
+    #: and prices bit-for-bit as before.
+    telemetry: "object | None" = dataclasses.field(default=None, repr=False)
 
     def __post_init__(self):
         self.ep_nodes = tuple(self.ep_nodes)
@@ -182,13 +189,12 @@ class Fabric:
     def _mc_enabled(self) -> bool:
         return self.mc_bw is not None and not isinstance(self.mc_bw, str)
 
-    def _price(
+    def _loads(
         self,
-        flows: Sequence[Flow],
         pairs: Sequence[tuple[int, int]],
         routes: Sequence[tuple[LinkKey, ...]],
-    ) -> list[float]:
-        """Fair-share + hotspot pricing of flows on an explicit route set."""
+    ) -> tuple[dict[LinkKey, int], dict[int, int]]:
+        """(flows per link, flows per capped endpoint node) of a route set."""
         link_load: dict[LinkKey, int] = {}
         node_load: dict[int, int] = {}
         for (s, d), r in zip(pairs, routes):
@@ -197,6 +203,16 @@ class Fabric:
             if r and self._mc_enabled:
                 node_load[s] = node_load.get(s, 0) + 1
                 node_load[d] = node_load.get(d, 0) + 1
+        return link_load, node_load
+
+    def _price(
+        self,
+        flows: Sequence[Flow],
+        pairs: Sequence[tuple[int, int]],
+        routes: Sequence[tuple[LinkKey, ...]],
+    ) -> list[float]:
+        """Fair-share + hotspot pricing of flows on an explicit route set."""
+        link_load, node_load = self._loads(pairs, routes)
         times = []
         for f, (s, d), r in zip(flows, pairs, routes):
             if not r:
@@ -221,7 +237,37 @@ class Fabric:
         topology's fixed route, exactly as before adaptive routing existed.
         """
         pairs = [self._endpoints(f) for f in flows]
-        return self._price(flows, pairs, self.route_flows(flows))
+        routes = self.route_flows(flows)
+        times = self._price(flows, pairs, routes)
+        tl = self.telemetry
+        if tl is not None and tl.enabled:
+            self._record_pass(tl, flows, pairs, routes, times)
+        return times
+
+    def _record_pass(self, tl, flows, pairs, routes, times) -> None:
+        """One routing pass into the telemetry registry (live sink only)."""
+        tl.counter("fabric.routing_passes").inc()
+        tl.counter("fabric.flows_priced").inc(len(flows))
+        link_load, node_load = self._loads(pairs, routes)
+        if link_load:
+            link_bytes: dict[LinkKey, float] = {}
+            for f, r in zip(flows, routes):
+                for k in r:
+                    link_bytes[k] = link_bytes.get(k, 0.0) + f.nbytes
+            for k in sorted(link_load):
+                tl.histogram("fabric.link_flows").observe(link_load[k])
+                tl.histogram("fabric.link_bytes").observe(link_bytes[k])
+            # fair-share contention factor: worst per-link flow count — 1.0
+            # means every link is private, k means someone runs at bw/k
+            tl.histogram("fabric.contention_factor").observe(max(link_load.values()))
+        for node in sorted(node_load):
+            cap = self._mc_cap(node)
+            if cap is not None:
+                # §6 hotspot saturation: flows queued at this node's memory
+                # controller (each gets cap/k of it)
+                tl.histogram("fabric.mc_node_flows").observe(node_load[node])
+        if times:
+            tl.histogram("fabric.flow_time_s").observe(max(times))
 
     def transfer_time(
         self,
@@ -364,7 +410,18 @@ class Fabric:
         # never-worse-than-static: a selfish equilibrium may price worse in
         # total than everyone staying on the default path; keep static then
         # (ties keep static, preserving the pre-adaptive assignment exactly)
-        if sum(self._price(flows, pairs, assign)) < sum(self._price(flows, pairs, static)):
+        adaptive_total = sum(self._price(flows, pairs, assign))
+        static_total = sum(self._price(flows, pairs, static))
+        tl = self.telemetry
+        if tl is not None and tl.enabled:
+            # >= 0 by the keep-static rule: how much the adaptive router
+            # actually saved over XY/Dijkstra on this flow set
+            tl.histogram("fabric.adaptive_delta_s").observe(
+                static_total - adaptive_total if adaptive_total < static_total else 0.0
+            )
+            kind = "improved" if adaptive_total < static_total else "kept_static"
+            tl.counter(f"fabric.adaptive.{kind}").inc()
+        if adaptive_total < static_total:
             return assign
         return list(static)
 

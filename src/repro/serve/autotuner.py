@@ -248,6 +248,11 @@ class ContinuousShisha:
     #: transfers against — set by a contention-aware co-simulator each
     #: monitor window; empty = contention-blind tuning
     background_flows: tuple = ()
+    #: live telemetry session or None, normally attached by the owning
+    #: :class:`~repro.serve.simulator.ServingSimulator`; handed to every
+    #: exploration :class:`~repro.core.evaluator.Trace` so each paid trial
+    #: records its charged wall cost and move kind
+    telemetry: "object | None" = None
 
     def __post_init__(self):
         if self.make_evaluator is None:
@@ -313,6 +318,7 @@ class ContinuousShisha:
             model_ev,
             measure_batches=self.measure_batches,
             reconfig_overhead=self.reconfig_overhead,
+            telemetry=self.telemetry,
         )
         if kind in ("dropout", "recovery", "repartition") or warm_conf is None:
             # re-seed via Algorithm 1: a warm start cannot drop a dead EP's

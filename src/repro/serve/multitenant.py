@@ -45,6 +45,7 @@ from ..core.heuristics import run_shisha
 from ..core.platform import Platform
 from ..interconnect import Flow
 from ..pipeline.hetero import EPDerates
+from ..telemetry import live
 from .autotuner import ContinuousShisha, drifted_platform, tune_batch_policy
 from .simulator import (
     _MONITOR,
@@ -172,6 +173,10 @@ class RepartitionEvent:
     #: clock for the forced re-tune this event caused
     retune_costs: dict[str, float]
     kind: str = "dropout"
+    #: the full package deal, one pricing-breakdown dict per steal (first
+    #: entry mirrors donor/stolen_ep/price); a single-steal rebalance has
+    #: exactly one entry, so pre-bundle consumers keep working unchanged
+    bundle: tuple[dict, ...] = ()
 
 
 class ElasticPartitioner:
@@ -294,6 +299,64 @@ class ElasticPartitioner:
             return None  # every offer hurts the donor more than it helps
         return donor, ep, price
 
+    def rebalance_bundle(
+        self,
+        partitions: dict[str, tuple[int, ...]],
+        victim: str,
+        tenants: dict[str, Tenant],
+        loads: dict[str, tuple[float, float]],
+        max_bundle: int = 1,
+    ) -> tuple[list[dict], dict[str, tuple[int, ...]]]:
+        """Package deal: up to ``max_bundle`` priced steals for ``victim``.
+
+        A tenant under *extreme pressure* — at-risk demand exceeding its own
+        arrival rate even after a steal, i.e. more than the burst headroom's
+        worth of traffic still uncovered — may need several EPs at once; a
+        one-EP-per-monitor-window drip would leave it violating its SLO for
+        windows on end while paying a full exploration wall per EP.  So the
+        rebalance is iterated *at decision time*: each round re-prices every
+        donor offer against the updated partitions (a donor that just gave
+        an EP up prices its next one higher) and stops at ``max_bundle``
+        steals, when no offer has positive surplus, or as soon as the
+        victim's residual at-risk demand drops to its arrival rate —
+        whichever comes first.  With ``max_bundle=1`` the deal is exactly
+        :meth:`rebalance`.
+
+        Returns ``(deals, new_partitions)``: one pricing-breakdown dict per
+        steal (``inf`` gains serialized as ``None`` for strict JSON) and the
+        partitions after the whole bundle moved.  Does not mutate
+        ``partitions``.
+        """
+        parts = {k: tuple(v) for k, v in partitions.items()}
+        deals: list[dict] = []
+        v_demand, v_urgency = loads[victim]
+        for _ in range(max(1, max_bundle)):
+            deal = self.rebalance(parts, victim, tenants, loads)
+            if deal is None:
+                break
+            donor, ep, price = deal
+            gain = self.gain(tenants[victim], parts[victim], ep, v_demand, v_urgency)
+            parts[donor] = tuple(e for e in parts[donor] if e != ep)
+            parts[victim] = parts[victim] + (ep,)
+            at_risk_after = self._at_risk(
+                self.tuned_throughput(tenants[victim], parts[victim]),
+                v_demand,
+                v_urgency,
+            )
+            deals.append(
+                {
+                    "donor": donor,
+                    "ep": ep,
+                    "price": price,
+                    "gain": None if math.isinf(gain) else gain,
+                    "surplus": None if math.isinf(gain) else gain - price,
+                    "victim_at_risk_after": at_risk_after,
+                }
+            )
+            if at_risk_after <= v_demand:
+                break  # pressure back within burst headroom: stop stealing
+        return deals, parts
+
 
 class SharedClockCoSimulator:
     """All tenants' stage queues on one discrete-event timeline.
@@ -333,6 +396,8 @@ class SharedClockCoSimulator:
         alpha: int = 10,
         contention_aware: bool = True,
         placement: bool = False,
+        telemetry=None,
+        max_bundle: int = 1,
     ):
         if make_evaluator is None:
             make_evaluator = lambda p, layers: DatabaseEvaluator(p, layers)
@@ -357,8 +422,14 @@ class SharedClockCoSimulator:
         #: (degraded) configuration keeps serving — the Shisha trade-off
         self.measure_batches = measure_batches
         self.alpha = alpha
+        #: live telemetry session or None, shared by every lane, the shared
+        #: loop and the (restricted) fabrics — one timeline for the whole run
+        self.telemetry = live(telemetry)
+        #: max EPs a victim under extreme pressure may receive per
+        #: repartition (package deal); 1 = classic single steal
+        self.max_bundle = max(1, max_bundle)
 
-        self.loop = EventLoop()
+        self.loop = EventLoop(self.telemetry)
         parts = partition_eps(
             platform, len(tenants), strategy, shares=[t.share for t in tenants]
         )
@@ -434,6 +505,8 @@ class SharedClockCoSimulator:
             monitor_interval=self.monitor_interval,
             autotuner=tuner,
             loop=self.loop,
+            telemetry=self.telemetry,
+            label=tenant.name,
         )
 
     # -- global fault script (global EP indices) ----------------------------
@@ -559,37 +632,53 @@ class SharedClockCoSimulator:
             e for e in self.partitions[victim] if e != dead_ep
         )
         loads = {name: self._load(name, t) for name in self.partitions}
-        deal = self._pricer().rebalance(self.partitions, victim, tenants, loads)
+        deals, new_parts = self._pricer().rebalance_bundle(
+            self.partitions, victim, tenants, loads, max_bundle=self.max_bundle
+        )
         donor = stolen = price = None
         affected = [victim]
-        if deal is not None:
-            donor, stolen, price = deal
-            self.partitions[donor] = tuple(
-                e for e in self.partitions[donor] if e != stolen
-            )
-            self.partitions[victim] = self.partitions[victim] + (stolen,)
-            affected.append(donor)
-        gains_lost = {
-            name: (
-                [stolen] if name == victim and stolen is not None else [],
-                [dead_ep] if name == victim else [stolen],
-            )
-            for name in affected
-        }
+        gains_lost: dict[str, tuple[list, list]] = {victim: ([], [dead_ep])}
+        if deals:
+            donor, stolen, price = deals[0]["donor"], deals[0]["ep"], deals[0]["price"]
+            for d in deals:
+                if d["donor"] not in affected:
+                    affected.append(d["donor"])
+                gains_lost[victim][0].append(d["ep"])
+                gains_lost.setdefault(d["donor"], ([], []))[1].append(d["ep"])
+                self.partitions[d["donor"]] = new_parts[d["donor"]]
+            self.partitions[victim] = new_parts[victim]
         retune_costs = self._stage_retunes(t, affected, gains_lost)
-        self.repartitions.append(
-            RepartitionEvent(
-                t=t,
-                dead_ep=dead_ep,
-                victim=victim,
-                donor=donor,
-                stolen_ep=stolen,
-                price=price,
-                partitions={k: tuple(v) for k, v in self.partitions.items()},
-                retune_costs=retune_costs,
-                kind="dropout",
-            )
+        event = RepartitionEvent(
+            t=t,
+            dead_ep=dead_ep,
+            victim=victim,
+            donor=donor,
+            stolen_ep=stolen,
+            price=price,
+            partitions={k: tuple(v) for k, v in self.partitions.items()},
+            retune_costs=retune_costs,
+            kind="dropout",
+            bundle=tuple(deals),
         )
+        self.repartitions.append(event)
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("coserve.repartitions.dropout").inc()
+            tl.counter("coserve.eps_stolen").inc(len(deals))
+            tl.instant(
+                "repartition",
+                t,
+                cat="coserve",
+                pid="coserve",
+                tid="partitioner",
+                args={
+                    "dead_ep": dead_ep,
+                    "victim": victim,
+                    "bundle": list(deals),
+                    "partitions": {k: list(v) for k, v in self.partitions.items()},
+                    "retune_costs": retune_costs,
+                },
+            )
 
     def _stage_retunes(
         self,
@@ -703,6 +792,22 @@ class SharedClockCoSimulator:
                 kind="revival",
             )
         )
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("coserve.repartitions.revival").inc()
+            tl.instant(
+                "revival",
+                t,
+                cat="coserve",
+                pid="coserve",
+                tid="partitioner",
+                args={
+                    "ep": ep_idx,
+                    "winner": winner,
+                    "gain": None if math.isinf(gain) else gain,
+                    "retune_costs": retune_costs,
+                },
+            )
 
     def _finish_install(self, name: str, part: tuple[int, ...]) -> None:
         self._installed[name] = tuple(part)
@@ -736,7 +841,7 @@ class SharedClockCoSimulator:
                     self._repartition(t, dead_ep)
             else:
                 self._revive(t, self._unhandled_revived.pop(0))
-        self._refresh_flows()
+        self._refresh_flows(t)
         nxt = t + self.monitor_interval
         if nxt < horizon:
             self.loop.push(nxt, _MONITOR, self, horizon)
@@ -767,12 +872,33 @@ class SharedClockCoSimulator:
             for s in range(conf.depth - 1)
         )
 
-    def _refresh_flows(self) -> None:
+    def _refresh_flows(self, t: float = 0.0) -> None:
         """Per-window flow injection: each lane serves (and, when
         ``contention_aware``, tunes) against the other lanes' live flows."""
         if self.platform.fabric is None:
             return
         flows = {name: self._lane_flows(name) for name in self.lanes}
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("coserve.flow_windows").inc()
+            tl.gauge("coserve.live_flows").set(sum(len(f) for f in flows.values()))
+            for name in sorted(flows):
+                if flows[name]:
+                    # one span per lane per monitor window: the flow set the
+                    # other lanes contend against until the next refresh
+                    tl.span(
+                        "flow_window",
+                        t,
+                        self.monitor_interval,
+                        cat="fabric",
+                        pid=name,
+                        tid="flows",
+                        args={
+                            "n": len(flows[name]),
+                            "bytes": sum(f.nbytes for f in flows[name]),
+                            "links": [[f.src, f.dst] for f in flows[name]],
+                        },
+                    )
         for name, lane in self.lanes.items():
             bg = tuple(
                 f for other, fl in flows.items() if other != name for f in fl
@@ -856,12 +982,18 @@ def co_serve(
     contention_aware: bool = True,
     placement: bool = False,
     faults: Sequence[tuple] | None = None,
+    telemetry=None,
+    max_bundle: int = 1,
 ) -> CoServeResult:
     """Partition, tune and co-serve all tenants on one shared clock.
 
     ``faults`` is a script of ``("slowdown", t, global_ep, factor)``,
     ``("dropout", t, global_ep)`` and ``("revival", t, global_ep)`` entries
-    applied to the global platform.
+    applied to the global platform.  ``telemetry`` (a
+    :class:`~repro.telemetry.Telemetry` session; default off) records the
+    whole run — tenants as trace processes, EPs/links as tracks.
+    ``max_bundle`` allows a victim under extreme pressure to receive up to
+    that many EPs in one priced package deal per repartition.
     """
     co = SharedClockCoSimulator(
         platform,
@@ -878,6 +1010,8 @@ def co_serve(
         alpha=alpha,
         contention_aware=contention_aware,
         placement=placement,
+        telemetry=telemetry,
+        max_bundle=max_bundle,
     )
     for fault in faults or ():
         if fault[0] == "slowdown":

@@ -55,6 +55,7 @@ from typing import Callable, Sequence
 from ..core.config import PipelineConfig
 from ..core.evaluator import AnalyticEvaluator
 from ..pipeline.hetero import EPDerates
+from ..telemetry import live
 
 # event kinds, in tie-break priority order at equal timestamps
 _ARRIVAL, _DONE, _PLATFORM, _MONITOR, _RECONFIG = range(5)
@@ -71,9 +72,16 @@ class EventLoop:
     guarantees owners are never compared by ``heapq``.
     """
 
-    def __init__(self):
+    def __init__(self, telemetry=None):
         self._heap: list = []
         self._seq = 0
+        #: events dispatched over the loop's lifetime — the denominator of
+        #: ``benchmarks/selfbench.py``'s simulated-events/sec figure
+        self.n_dispatched = 0
+        #: live telemetry session or None; when live, ``run`` keeps
+        #: ``telemetry.now`` on the simulated clock and wall-profiles the
+        #: dispatch loop under the ``event_loop.run`` scope
+        self.telemetry = live(telemetry)
 
     def push(self, t: float, kind: int, owner, payload) -> None:
         self._seq += 1
@@ -81,11 +89,23 @@ class EventLoop:
 
     def run(self, horizon: float) -> None:
         """Dispatch events in (time, kind, push-order) order up to horizon."""
-        while self._heap:
-            t, kind, _seq, owner, payload = heapq.heappop(self._heap)
-            if t > horizon:
-                break
-            owner._dispatch(t, kind, payload)
+        tl = self.telemetry
+        if tl is None:
+            while self._heap:
+                t, kind, _seq, owner, payload = heapq.heappop(self._heap)
+                if t > horizon:
+                    break
+                self.n_dispatched += 1
+                owner._dispatch(t, kind, payload)
+            return
+        with tl.timed("event_loop.run"):
+            while self._heap:
+                t, kind, _seq, owner, payload = heapq.heappop(self._heap)
+                if t > horizon:
+                    break
+                self.n_dispatched += 1
+                tl.now = t
+                owner._dispatch(t, kind, payload)
 
 
 @dataclasses.dataclass
@@ -184,6 +204,8 @@ class ServingSimulator:
         autotuner=None,
         batch_policy: Sequence[int] | None = None,
         loop: EventLoop | None = None,
+        telemetry=None,
+        label: str = "serve",
     ):
         self.evaluator = evaluator
         self.conf = conf
@@ -196,6 +218,19 @@ class ServingSimulator:
         self.batch_policy = self._policy(batch_policy, conf.depth)
         #: the event heap — private by default, shared under co-simulation
         self.loop = loop if loop is not None else EventLoop()
+        #: lane name: telemetry metric prefix and trace process (the tenant)
+        self.label = label
+        #: live telemetry session or None (``NULL`` normalizes to None, so
+        #: every per-event guard below is one ``is not None`` check)
+        self.telemetry = live(telemetry)
+        if self.telemetry is not None:
+            if self.loop.telemetry is None:
+                self.loop.telemetry = self.telemetry
+            fabric = evaluator.platform.fabric
+            if fabric is not None:
+                fabric.telemetry = self.telemetry
+            if autotuner is not None and getattr(autotuner, "telemetry", None) is None:
+                autotuner.telemetry = self.telemetry
 
         n_eps = evaluator.platform.n_eps
         self.drift = EPDerates(factors=(1.0,) * n_eps)
@@ -309,6 +344,9 @@ class ServingSimulator:
             if math.isnan(r.t_start):
                 r.t_start = t
         st.busy, st.batch, st.service_dt = True, batch, dt
+        tl = self.telemetry
+        if tl is not None:
+            tl.histogram(f"{self.label}.batch_size").observe(b)
         self._push(t + dt, _DONE, (stage, st.token, self._epoch))
 
     def _on_done(self, t: float, stage: int, token: int, epoch: int) -> None:
@@ -320,10 +358,40 @@ class ServingSimulator:
         st.busy = False
         self._busy_time[self.conf.eps[stage]] += st.service_dt
         batch, st.batch = st.batch or [], None
+        tl = self.telemetry
+        if tl is not None and batch:
+            # one span per served batch, on the hosting EP's track — the
+            # "stage hop" leg of every member request's lifecycle
+            tl.span(
+                f"stage{stage}",
+                t - st.service_dt,
+                st.service_dt,
+                cat="request",
+                pid=self.label,
+                tid=f"ep{self.conf.eps[stage]}",
+                args={"stage": stage, "batch": len(batch)},
+            )
         if stage == self.conf.depth - 1:
             for r in batch:
                 r.t_done = t
                 self._completed.append(r)
+                if tl is not None:
+                    ok = r.latency <= self.slo
+                    tl.counter(f"{self.label}.slo.{'hit' if ok else 'miss'}").inc()
+                    tl.histogram(f"{self.label}.latency_s").observe(r.latency)
+                    tl.span(
+                        "request",
+                        r.t_arrival,
+                        r.latency,
+                        cat="request",
+                        pid=self.label,
+                        tid="requests",
+                        args={
+                            "rid": r.rid,
+                            "wait_s": r.t_start - r.t_arrival,
+                            "slo_ok": ok,
+                        },
+                    )
         else:
             self._stages[stage + 1].queue.extend(batch)
             self._try_start(stage + 1, t)
@@ -346,6 +414,21 @@ class ServingSimulator:
             entry["batch_policy"] = list(retune.batch_policy)
         if extra:
             entry.update(extra)
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter(f"{self.label}.retunes.{retune.kind}").inc()
+            tl.histogram(f"{self.label}.retune_cost_s").observe(retune.tuning_cost)
+            # the Alg. 2 exploration window as a span: its dur is the charged
+            # Trace.wall the old configuration serves degraded through
+            tl.span(
+                f"retune:{retune.kind}",
+                t,
+                retune.tuning_cost,
+                cat="retune",
+                pid=self.label,
+                tid="tuner",
+                args={k: v for k, v in entry.items() if k != "t"},
+            )
         self._push(self._retuning_until, _RECONFIG, (retune, entry, replatform))
 
     def _fold_busy_time(self) -> None:
@@ -376,6 +459,13 @@ class ServingSimulator:
             self.drift = replatform.drift
             self.dead = set(replatform.dead)
             self._busy_time = [0.0] * self.evaluator.platform.n_eps
+            if self.telemetry is not None:
+                # the swapped-in evaluator carries a freshly restricted
+                # fabric: re-attach the session so routing passes keep
+                # recording after the re-partition
+                fabric = self.evaluator.platform.fabric
+                if fabric is not None:
+                    fabric.telemetry = self.telemetry
         old_policy = self.batch_policy
         self.conf = retune.conf
         if retune.batch_policy is not None:
@@ -391,6 +481,21 @@ class ServingSimulator:
         self._stages = [_Stage(queue=deque()) for _ in range(self.conf.depth)]
         self._stages[0].queue.extend(displaced)
         self._stall_until = t + retune.downtime
+        tl = self.telemetry
+        if tl is not None:
+            tl.instant(
+                "install",
+                t,
+                cat="retune",
+                pid=self.label,
+                tid="tuner",
+                args={
+                    "kind": retune.kind,
+                    "displaced": len(displaced),
+                    "downtime_s": retune.downtime,
+                    "new_depth": self.conf.depth,
+                },
+            )
         self._push(self._stall_until, _PLATFORM, lambda sim, now: sim._try_start(0, now))
 
     def _on_monitor(self, t: float, horizon: float) -> None:
@@ -398,6 +503,12 @@ class ServingSimulator:
             len(st.batch or []) for st in self._stages if st.busy
         )
         self._load_samples.append((t, in_system))
+        tl = self.telemetry
+        if tl is not None:
+            tl.histogram(f"{self.label}.queue_depth").observe(
+                sum(len(st.queue) for st in self._stages)
+            )
+            tl.gauge(f"{self.label}.in_system").set(in_system)
         if self.autotuner is not None and t >= self._stall_until and t >= self._retuning_until:
             retune = self.autotuner.observe(
                 t, self.conf, self.observed_stage_times(), self.drift, frozenset(self.dead)
@@ -423,6 +534,8 @@ class ServingSimulator:
         """Handle one event; called by whichever loop owns the clock."""
         if kind == _ARRIVAL:
             self._n_arrived += 1
+            if self.telemetry is not None:
+                self.telemetry.counter(f"{self.label}.arrivals").inc()
             self._stages[0].queue.append(payload)
             self._try_start(0, t)
         elif kind == _DONE:
