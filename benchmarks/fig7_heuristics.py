@@ -31,7 +31,7 @@ def run(verbose: bool = True, nets=("resnet50", "yolov3")) -> dict:
                 tr = Trace(DatabaseEvaluator(plat, layers))
                 res = run_shisha(ws, tr, h)
                 row[h] = {"tp": res.result.best_throughput, "wall": tr.wall, "trials": tr.n_trials}
-            best = max(row.values(), key=lambda r: r["tp"])["tp"]
+            best = max(r["tp"] for r in row.values())
             for h in row:
                 row[h]["norm"] = row[h]["tp"] / best
             payload[net][conf_name] = row

@@ -146,7 +146,7 @@ for e in spans:
     calls, dur = by_track.get(key, (0, 0.0))
     by_track[key] = (calls + 1, dur + e["dur"] / 1e6)
 print("[trace] process/track        spans  busy(sim s)")
-for (proc, name), (calls, dur) in sorted(by_track.items(), key=lambda kv: -kv[1][0])[:8]:
+for (proc, name), (calls, dur) in sorted(by_track.items(), key=lambda kv: (-kv[1][0], kv[0]))[:8]:
     print(f"[trace] {proc:>9s}/{name:<12s} {calls:5d}  {dur:8.1f}")
 
 # the cross-layer metrics registry: one line per headline metric

@@ -259,7 +259,11 @@ class Fabric:
                 tl.histogram("fabric.link_bytes").observe(link_bytes[k])
             # fair-share contention factor: worst per-link flow count — 1.0
             # means every link is private, k means someone runs at bw/k
-            tl.histogram("fabric.contention_factor").observe(max(link_load.values()))
+            # scalar max over flow counts: ties are value-identical, so
+            # insertion order cannot leak into the observed factor
+            tl.histogram("fabric.contention_factor").observe(
+                max(link_load.values())  # shisha: allow(unkeyed-sort)
+            )
         for node in sorted(node_load):
             cap = self._mc_cap(node)
             if cap is not None:

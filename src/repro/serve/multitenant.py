@@ -283,7 +283,11 @@ class ElasticPartitioner:
         offers: list[tuple[float, float, int, str]] = []
         v_part = partitions[victim]
         v_demand, v_urgency = loads[victim]
-        for name, part in partitions.items():
+        # iterate donors by name, not dict insertion order: the offer sort
+        # key below is total anyway, but pinning the scan order keeps the
+        # pricing cache fill (and any future early-exit) independent of
+        # the order a caller happened to assemble `partitions` in
+        for name, part in sorted(partitions.items()):
             if name == victim or len(part) < 2:
                 continue
             d_demand, d_urgency = loads[name]
@@ -763,13 +767,15 @@ class SharedClockCoSimulator:
         tenants = {x.name: x for x in self.tenants}
         loads = {name: self._load(name, t) for name in self.partitions}
         pricer = self._pricer()
+        # bid tuples end in the unique tenant name, so the sort is total;
+        # scanning in name order additionally pins cache-fill order
         bids = sorted(
             (
                 -pricer.gain(tenants[name], part, ep_idx, *loads[name]),
                 len(part),
                 name,
             )
-            for name, part in self.partitions.items()
+            for name, part in sorted(self.partitions.items())
         )
         neg_gain, _, winner = bids[0]
         # a starved tenant bids inf (it must be re-housed); record that as

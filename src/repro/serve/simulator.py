@@ -534,8 +534,9 @@ class ServingSimulator:
         """Handle one event; called by whichever loop owns the clock."""
         if kind == _ARRIVAL:
             self._n_arrived += 1
-            if self.telemetry is not None:
-                self.telemetry.counter(f"{self.label}.arrivals").inc()
+            tl = self.telemetry
+            if tl is not None:
+                tl.counter(f"{self.label}.arrivals").inc()
             self._stages[0].queue.append(payload)
             self._try_start(0, t)
         elif kind == _DONE:

@@ -44,11 +44,14 @@ class _Timer:
         self._scope = scope
 
     def __enter__(self):
-        self._t0 = time.perf_counter()
+        # the one sanctioned wall-clock instrument: timed() profiles real
+        # elapsed time by design and its readings are never exported into
+        # seeded artifacts (see profile_snapshot)
+        self._t0 = time.perf_counter()  # shisha: allow(wall-clock)
         return self
 
     def __exit__(self, *exc):
-        dt = time.perf_counter() - self._t0
+        dt = time.perf_counter() - self._t0  # shisha: allow(wall-clock)
         slot = self._profile.get(self._scope)
         if slot is None:
             self._profile[self._scope] = [1, dt]

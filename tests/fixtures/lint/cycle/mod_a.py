@@ -1,0 +1,4 @@
+"""Half of an eager import cycle (with mod_b)."""
+import mod_b  # noqa: F401
+
+VALUE_A = 1

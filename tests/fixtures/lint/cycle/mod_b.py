@@ -1,0 +1,4 @@
+"""Other half of the eager import cycle (with mod_a)."""
+import mod_a  # noqa: F401
+
+VALUE_B = 2

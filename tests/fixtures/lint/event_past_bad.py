@@ -1,0 +1,6 @@
+"""Violates event-past: events scheduled behind the loop clock."""
+
+
+def reschedule(loop, t, dt):
+    loop.push(t - dt, 0, None, "late")
+    loop.push(-1.0, 0, None, "negative")

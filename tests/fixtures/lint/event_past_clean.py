@@ -1,0 +1,6 @@
+"""Clean: events are scheduled at or after the current loop time."""
+
+
+def reschedule(loop, t, dt):
+    loop.push(t, 0, None, "now")
+    loop.push(t + dt, 0, None, "later")

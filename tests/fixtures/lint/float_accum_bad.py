@@ -1,0 +1,7 @@
+"""Violates float-accum: fp sum over an unordered set."""
+
+
+def total(xs):
+    direct = sum({x * 0.1 for x in xs})
+    via_gen = sum(v + 1.0 for v in set(xs))
+    return direct + via_gen

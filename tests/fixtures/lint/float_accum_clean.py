@@ -1,0 +1,7 @@
+"""Clean: accumulation order is pinned before summing."""
+
+
+def total(xs):
+    direct = sum(sorted(x * 0.1 for x in xs))
+    via_gen = sum(sorted(v + 1.0 for v in sorted(set(xs))))
+    return direct + via_gen

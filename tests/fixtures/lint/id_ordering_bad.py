@@ -1,0 +1,9 @@
+"""Violates id-ordering: object addresses used as an ordering."""
+
+
+def stable(items):
+    return sorted(items, key=id)
+
+
+def racy(a, b):
+    return id(a) < id(b)

@@ -1,0 +1,9 @@
+"""Clean: ordering uses stable, run-independent keys."""
+
+
+def stable(items):
+    return sorted(items, key=str)
+
+
+def racy(a, b):
+    return str(a) < str(b)

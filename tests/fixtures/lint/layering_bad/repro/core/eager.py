@@ -1,0 +1,2 @@
+"""Violates import-layering: core may import interconnect only lazily."""
+from repro.interconnect import Fabric  # noqa: F401

@@ -1,0 +1,2 @@
+"""Violates import-layering: telemetry must import nothing internal."""
+from repro.serve import simulator  # noqa: F401

@@ -1,0 +1,3 @@
+"""Clean: serve sits above core/interconnect/telemetry in the DAG."""
+from repro.core import config  # noqa: F401
+from repro.telemetry import live  # noqa: F401

@@ -1,0 +1,8 @@
+"""Violates set-iteration: order-sensitive work driven by a set."""
+
+
+def drain(pending):
+    order = []
+    for ep in {3, 1, 2}:
+        order.append(ep)
+    return order + [x for x in set(pending)]

@@ -1,0 +1,8 @@
+"""Clean: sets are sorted before any order-sensitive iteration."""
+
+
+def drain(pending):
+    order = []
+    for ep in sorted({3, 1, 2}):
+        order.append(ep)
+    return order + [x for x in sorted(set(pending))]

@@ -1,0 +1,5 @@
+"""A stale pragma: nothing on the line needs suppressing."""
+
+
+def add(a, b):
+    return a + b  # shisha: allow(wall-clock)

@@ -1,0 +1,7 @@
+"""Violates telemetry-guard: duck-typed handle used without a guard."""
+
+
+def record(sim, value):
+    sim.telemetry.counter("x").inc()
+    tl = sim.telemetry
+    tl.gauge("y").set(value)

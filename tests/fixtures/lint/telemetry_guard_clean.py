@@ -1,0 +1,7 @@
+"""Clean: bind the handle to a local, guard, then use."""
+
+
+def record(sim, value):
+    tl = sim.telemetry
+    if tl is not None:
+        tl.gauge("y").set(value)

@@ -1,0 +1,7 @@
+"""Violates unkeyed-sort: dict-view ordering with insertion-order ties."""
+
+
+def hottest(load):
+    worst = max(load.values())
+    first = min(load.items(), key=lambda kv: kv[1])
+    return worst, first

@@ -1,0 +1,7 @@
+"""Clean: the unique dict key is folded into every ordering decision."""
+
+
+def hottest(load):
+    worst, _ = max(load.items(), key=lambda kv: (kv[1], kv[0]))
+    first = min(load.items(), key=lambda kv: (kv[1], kv[0]))
+    return worst, first

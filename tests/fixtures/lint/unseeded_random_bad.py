@@ -1,0 +1,9 @@
+"""Violates unseeded-random: global RNG and legacy numpy API."""
+import random
+
+import numpy as np
+
+
+def jitter(n):
+    base = np.random.rand(n)
+    return [b + random.random() for b in base]

@@ -1,0 +1,10 @@
+"""Clean: every draw flows from an explicit seed."""
+import random
+
+import numpy as np
+
+
+def jitter(n, seed):
+    rng = np.random.default_rng(seed)
+    fallback = random.Random(seed)
+    return [b + fallback.random() for b in rng.random(n)]

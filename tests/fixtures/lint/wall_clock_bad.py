@@ -1,0 +1,9 @@
+"""Violates wall-clock: reads real time on a simulated path."""
+import time
+from datetime import datetime
+
+
+def stamp(events):
+    events.append(time.time())
+    events.append(time.perf_counter())
+    events.append(datetime.now())

@@ -334,6 +334,22 @@ def test_adaptive_rerouting_relieves_a_congested_row():
     assert row0_load(adaptive.route_flows(flows)) < row0_load(fab.route_flows(flows))
 
 
+def test_adaptive_assignment_insensitive_to_flow_list_order():
+    """Shisha-lint contract audit: adaptive routing is a function of the
+    flow *multiset*, so permuting the caller's flow list must permute the
+    per-flow times identically — no dict/set iteration-order tie-break
+    may leak the assembly order into the assignment."""
+    fab = uniform_fabric(mesh2d(2, 4, bw=1e8, latency=1e-6), mc_bw=None)
+    adaptive = fab.with_routing("adaptive")
+    flows = [Flow(1, 2, 1e6)] + list(_congestor()) + [Flow(1, 2, 1e6)]
+    times = adaptive.flow_times(flows)
+    perm = [4, 0, 5, 2, 1, 3]
+    times_perm = adaptive.flow_times([flows[i] for i in perm])
+    assert times_perm == [times[i] for i in perm]
+    # and the seeded rerun is bit-for-bit: same fabric, same flows, twice
+    assert adaptive.flow_times(flows) == times
+
+
 def test_express_links_invisible_to_xy_but_exploited_by_adaptive():
     topo = mesh2d(2, 4, bw=1e8, latency=1e-6, express_bw=2e8)
     assert (0, 2) in topo.links  # the express channel exists ...

@@ -288,6 +288,36 @@ def test_partitioner_prices_headroomed_donor_near_zero(plat, tenants):
     assert ep.price(donor, part, 3, demand=cap, urgency=0.0) > 0.0
 
 
+def test_rebalance_insensitive_to_partition_insertion_order(plat, tenants):
+    """Shisha-lint contract audit: offer pricing scans donors in *name*
+    order, not dict insertion order, and the offer sort key is total —
+    so the same partition content must produce bit-for-bit identical
+    deals no matter how the caller assembled the partitions dict."""
+    tmap = {t.name: t for t in tenants}
+    base = {"synthnet": (0, 2, 4), "resnet50": (1, 3, 5, 7)}
+    flipped = {"resnet50": (1, 3, 5, 7), "synthnet": (0, 2, 4)}
+    pricer = ElasticPartitioner(plat, lambda p, L: DatabaseEvaluator(p, L))
+    cap = pricer.tuned_throughput(tmap["synthnet"], base["synthnet"])
+    loads = {"synthnet": (2.0 * cap, 3.0), "resnet50": (1.0, 0.0)}
+    deals_a, parts_a = pricer.rebalance_bundle(
+        base, "synthnet", tmap, loads, max_bundle=2
+    )
+    # a fresh pricer for the permuted dict, so the shared pricing cache
+    # cannot mask an iteration-order dependence in the cold path
+    fresh = ElasticPartitioner(plat, lambda p, L: DatabaseEvaluator(p, L))
+    deals_b, parts_b = fresh.rebalance_bundle(
+        flipped, "synthnet", tmap, loads, max_bundle=2
+    )
+    assert deals_a, "pressured victim with a headroomed donor must steal"
+    assert deals_a == deals_b
+    assert parts_a == parts_b
+    # seeded rerun on the warm pricer is bit-for-bit too
+    assert pricer.rebalance_bundle(base, "synthnet", tmap, loads, max_bundle=2) == (
+        deals_a,
+        parts_a,
+    )
+
+
 def test_partitioner_ignores_useless_ep_for_victim(plat, tenants):
     ep = ElasticPartitioner(plat, lambda p, L: DatabaseEvaluator(p, L))
     victim = tenants[0]  # synthnet
