@@ -45,14 +45,15 @@ class LayerContract:
 
 
 CONTRACTS: dict[str, LayerContract] = {
-    "core": LayerContract(eager=frozenset(), lazy=frozenset({"interconnect"})),
+    "core": LayerContract(eager=frozenset(), lazy=frozenset({"interconnect", "power"})),
     "interconnect": LayerContract(eager=frozenset(), lazy=frozenset()),
+    "power": LayerContract(eager=frozenset(), lazy=frozenset()),
     "telemetry": LayerContract(eager=frozenset(), lazy=frozenset()),
     "analysis": LayerContract(eager=frozenset(), lazy=frozenset()),
 }
 
 #: packages that must import nothing outside the standard library
-STDLIB_ONLY = frozenset({"analysis"})
+STDLIB_ONLY = frozenset({"analysis", "power"})
 
 
 def _is_type_checking_test(test: ast.expr) -> bool:

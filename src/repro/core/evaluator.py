@@ -67,9 +67,22 @@ class AnalyticEvaluator:
     #: serving layer); ignored on scalar-link platforms
     background_flows: tuple = ()
 
-    def layer_time(self, layer: Layer, ep_idx: int) -> float:
+    def nominal_layer_time(self, layer: Layer, ep_idx: int) -> float:
+        """Layer time at the EP's nominal clock (DVFS-independent)."""
         ep = self.platform.eps[ep_idx]
         return max(layer.flops / ep.flops, layer.bytes_mem / ep.mem_bw) + self.layer_overhead
+
+    def layer_time(self, layer: Layer, ep_idx: int) -> float:
+        t = self.nominal_layer_time(layer, ep_idx)
+        pm = self.platform.power
+        if pm is not None:
+            # DVFS scales the EP's compute rate and memory bandwidth
+            # together, so the whole on-EP time divides by the level's
+            # scale (exactly 1.0 at nominal: the no-power path is
+            # reproduced bit-for-bit).  Link transfers are unscaled — the
+            # interconnect runs on its own clock.
+            t = t / pm.scale(ep_idx)
+        return t
 
     def transfer_times(self, conf: PipelineConfig) -> list[float]:
         """Inter-stage transfer time per stage boundary (s -> s+1).
@@ -145,18 +158,28 @@ class DatabaseEvaluator(AnalyticEvaluator):
         self._db: dict[tuple[int, int], float] = {}
         for li, layer in enumerate(self.layers):
             for ei in range(self.platform.n_eps):
-                base = AnalyticEvaluator.layer_time(self, layer, ei)
+                # DB entries are nominal-clock times: the database is
+                # measured once, while DVFS levels move during tuning, so
+                # the scale is applied at query time (see stage_times)
+                base = AnalyticEvaluator.nominal_layer_time(self, layer, ei)
                 self._db[(li, ei)] = base * _noise(f"{layer.name}|{self.platform.eps[ei].name}", self.noise_sigma)
 
     def layer_time_by_index(self, layer_idx: int, ep_idx: int) -> float:
-        return self._db[(layer_idx, ep_idx)]
+        t = self._db[(layer_idx, ep_idx)]
+        pm = self.platform.power
+        if pm is not None:
+            t = t / pm.scale(ep_idx)
+        return t
 
     def stage_times(self, conf: PipelineConfig) -> list[float]:
         times = []
         link = self.transfer_times(conf)
+        pm = self.platform.power
         for s, (a, b) in enumerate(conf.boundaries()):
             ep_idx = conf.eps[s]
             t = sum(self._db[(i, ep_idx)] for i in range(a, b))
+            if pm is not None:
+                t = t / pm.scale(ep_idx)
             if s < conf.depth - 1:
                 t += link[s]
             times.append(t)

@@ -27,6 +27,7 @@ from typing import TYPE_CHECKING, Sequence
 
 if TYPE_CHECKING:
     from ..interconnect import Fabric
+    from ..power import PowerModel
 
 # ---------------------------------------------------------------------------
 # EP / Platform
@@ -69,11 +70,18 @@ class Platform:
     back to the scalar per-EP ``link_bw``/``link_latency`` model, which a
     fully-connected fabric reproduces bit-for-bit.  The field is excluded
     from comparison/hash so platform equality keeps its pre-fabric meaning.
+
+    ``power`` (optional) attaches per-EP DVFS state tables and a package
+    power cap (:class:`~repro.power.PowerModel`), following the same
+    playbook: compare-excluded, off by default, and a degenerate model
+    (single nominal level, no cap) reproduces the power-free results
+    bit-for-bit.
     """
 
     name: str
     eps: tuple[EP, ...]
     fabric: "Fabric | None" = dataclasses.field(default=None, compare=False)
+    power: "PowerModel | None" = dataclasses.field(default=None, compare=False)
 
     def __post_init__(self):
         if not self.eps:
@@ -81,6 +89,11 @@ class Platform:
         if self.fabric is not None and self.fabric.n_eps != len(self.eps):
             raise ValueError(
                 f"fabric binds {self.fabric.n_eps} EPs but platform has {len(self.eps)}"
+            )
+        if self.power is not None and self.power.n_eps != len(self.eps):
+            raise ValueError(
+                f"power model covers {self.power.n_eps} EPs but platform has "
+                f"{len(self.eps)}"
             )
 
     @property
@@ -135,6 +148,15 @@ class Platform:
             fabric = dataclasses.replace(fabric, mc_bw=caps)
         return dataclasses.replace(self, fabric=fabric)
 
+    def with_power(self, power: "PowerModel") -> "Platform":
+        """Copy of the platform with a power/thermal model attached.
+
+        The model is shared by reference (its per-EP DVFS levels are live
+        tuned state), so two platform copies made with ``dataclasses.replace``
+        see the same frequencies — deliberately, like ``fabric``.
+        """
+        return dataclasses.replace(self, power=power)
+
     def with_latency(self, latency_s: float) -> "Platform":
         """Copy of the platform with every inter-EP link latency replaced.
 
@@ -154,14 +176,20 @@ class Platform:
 
         An attached fabric is restricted to the survivors: the dead chiplet's
         router keeps forwarding (routes are physically unchanged), only the
-        EP binding shrinks.
+        EP binding shrinks.  An attached power model is restricted the same
+        way (a copy carrying the survivors' current DVFS levels).
         """
         dead_set = set(dead)
         keep = [i for i in range(len(self.eps)) if i not in dead_set]
         eps = tuple(self.eps[i] for i in keep)
         fabric = self.fabric.restrict(keep) if self.fabric is not None else None
+        power = self.power.restrict(keep) if self.power is not None else None
         return dataclasses.replace(
-            self, name=f"{self.name}-minus{sorted(dead_set)}", eps=eps, fabric=fabric
+            self,
+            name=f"{self.name}-minus{sorted(dead_set)}",
+            eps=eps,
+            fabric=fabric,
+            power=power,
         )
 
 

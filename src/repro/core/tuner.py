@@ -188,6 +188,33 @@ class TuneResult:
     best_throughput: float
     n_explored: int
     final_conf: PipelineConfig
+    #: per-EP DVFS level vector adopted with ``best_conf`` when the tuner
+    #: ran with ``dvfs=True`` on a powered platform; None otherwise
+    dvfs_levels: tuple[int, ...] | None = None
+
+
+def _dvfs_candidate(pm, conf: PipelineConfig, slowest: int):
+    """One DVFS knob to try this step: ``(ep, new_level, kind)`` or None.
+
+    Preference order mirrors the boundary heuristic's bottleneck focus:
+    step the slowest stage's EP *up* a level when the package cap still
+    admits it; otherwise free headroom by stepping *down* the hungriest
+    other in-use EP.  Deterministic — ties on watts resolve to the lowest
+    EP index.
+    """
+    slow_ep = conf.eps[slowest]
+    if pm.can_step_up(slow_ep):
+        prev = pm.level(slow_ep)
+        pm.set_level(slow_ep, prev - 1)
+        feasible = pm.cap_feasible(conf.eps)
+        pm.set_level(slow_ep, prev)
+        if feasible:
+            return (slow_ep, prev - 1, "dvfs_up")
+    others = [e for e in sorted(set(conf.eps)) if e != slow_ep and pm.can_step_down(e)]
+    if others:
+        victim = max(others, key=lambda e: (pm.dynamic_w(e), -e))
+        return (victim, pm.level(victim) + 1, "dvfs_down")
+    return None
 
 
 def tune(
@@ -198,6 +225,7 @@ def tune(
     max_steps: int = 10_000,
     placement: bool = False,
     placement_exclude: frozenset = frozenset(),
+    dvfs: bool = False,
 ) -> TuneResult:
     """Algorithm 2.  ``trace`` wraps the evaluator and accounts cost.
 
@@ -206,31 +234,62 @@ def tune(
     ``placement_exclude``) — and adopts whichever measured candidate
     (boundary move or relocation) is fastest.  Off by default: the paper's
     loop is reproduced move for move.
+
+    ``dvfs=True`` (requires a :class:`~repro.power.PowerModel` attached to
+    the platform) makes per-EP frequency levels tuned state alongside the
+    boundary/placement moves: before the loop, in-use EPs are stepped down
+    until the package power cap is satisfied (each enforced level is a paid
+    trial — the runtime must re-measure at the new clocks); each step then
+    adds one DVFS candidate (up-shift the bottleneck EP if the cap admits
+    it, else down-shift the hungriest non-bottleneck EP), applied only for
+    its own trial and re-applied if adopted.  Candidates whose EP set would
+    break the cap are rejected before being paid.  The best level vector is
+    left applied on the power model and returned in ``dvfs_levels``.
     """
     conf = seed.conf if isinstance(seed, Seed) else seed
     platform = trace.evaluator.platform
-    throughput = trace.execute(conf)
-    best_conf, best_tp = conf, throughput
     #: live telemetry session of the trace, or None (duck-typed; the move
     #: kind and beat delta of every adopted candidate are the tuner-side
     #: facts Trace.execute cannot see)
     tl = getattr(trace, "telemetry", None)
     if tl is not None and not tl.enabled:
         tl = None
+    pm = platform.power if dvfs else None
+    if pm is not None and not pm.tunable and pm.cap_feasible(conf.eps):
+        pm = None  # single-level ladders under a satisfied cap: nothing to tune
+    if pm is not None:
+        # cap enforcement: walk the hungriest in-use EPs down until the
+        # package fits (or every ladder bottoms out); each enforced level
+        # is a paid measurement at the new clocks
+        while not pm.cap_feasible(conf.eps):
+            cands = [e for e in sorted(set(conf.eps)) if pm.can_step_down(e)]
+            if not cands:
+                break
+            victim = max(cands, key=lambda e: (pm.dynamic_w(e), -e))
+            pm.set_level(victim, pm.level(victim) + 1)
+            trace.execute(conf)
+            if tl is not None:
+                tl.counter("tune.moves.dvfs_cap").inc()
+    throughput = trace.execute(conf)
+    best_conf, best_tp = conf, throughput
+    best_levels = pm.snapshot() if pm is not None else None
     gamma = 0
     steps = 0
     while gamma < alpha and steps < max_steps:
         steps += 1
         stage_times = trace.evaluator.stage_times(conf)
         slowest = max(range(conf.depth), key=stage_times.__getitem__)
-        #: (candidate, per-trial reconfig cost — None = flat overhead)
-        candidates: list[tuple[PipelineConfig, float | None]] = []
+        #: (candidate, per-trial reconfig cost — None = flat overhead,
+        #:  DVFS change (ep, new_level) or None, move kind)
+        candidates: list[
+            tuple[PipelineConfig, float | None, tuple[int, int] | None, str]
+        ] = []
         target = pick_target(conf, stage_times, slowest, platform, balancing)
         if target is not None:
             direction = 1 if target > slowest else -1
             nxt = _move_toward(conf, slowest, direction)
             if nxt is not None and nxt != conf:
-                candidates.append((nxt, None))
+                candidates.append((nxt, None, None, "boundary"))
         if placement:
             new_ep = placement_candidate(conf, slowest, platform, placement_exclude)
             if new_ep is not None:
@@ -241,19 +300,40 @@ def tune(
                     (
                         _relocate(conf, slowest, new_ep),
                         placement_reconfig_cost(trace, conf, slowest, new_ep),
+                        None,
+                        "relocation",
                     )
                 )
+        if pm is not None:
+            # reject cap-infeasible boundary/placement candidates before
+            # they are paid (a move onto a hungrier EP set may break the
+            # cap at the current levels)
+            candidates = [
+                c for c in candidates if pm.cap_feasible(c[0].eps)
+            ]
+            dv = _dvfs_candidate(pm, conf, slowest)
+            if dv is not None:
+                candidates.append((conf, None, (dv[0], dv[1]), dv[2]))
         if not candidates:
             break  # perfectly balanced, single stage, or nowhere to move
         # every candidate is a paid online trial; ties resolve to the first
-        # (boundary move before relocation), keeping the no-placement path
-        # identical to the paper's loop
-        measured = [(trace.execute(c, reconfig_cost=rc), c) for c, rc in candidates]
+        # (boundary move before relocation before DVFS), keeping the
+        # no-placement, no-DVFS path identical to the paper's loop
+        measured = []
+        for c, rc, change, _kind in candidates:
+            if change is not None:
+                prev_level = pm.level(change[0])
+                pm.set_level(change[0], change[1])
+            measured.append((trace.execute(c, reconfig_cost=rc), c))
+            if change is not None:
+                pm.set_level(change[0], prev_level)
         chosen = max(range(len(measured)), key=lambda i: (measured[i][0], -i))
         tp, conf = measured[chosen]
+        change = candidates[chosen][2]
+        if change is not None:
+            pm.set_level(change[0], change[1])
         if tl is not None:
-            kind = "relocation" if candidates[chosen][1] is not None else "boundary"
-            tl.counter(f"tune.moves.{kind}").inc()
+            tl.counter(f"tune.moves.{candidates[chosen][3]}").inc()
             tl.histogram("tune.beat_delta_s").observe(
                 1.0 / tp - stage_times[slowest]
             )
@@ -264,4 +344,14 @@ def tune(
             throughput = tp
         if tp > best_tp:
             best_conf, best_tp = conf, tp
-    return TuneResult(best_conf=best_conf, best_throughput=best_tp, n_explored=trace.n_trials, final_conf=conf)
+            if pm is not None:
+                best_levels = pm.snapshot()
+    if pm is not None:
+        pm.restore(best_levels)
+    return TuneResult(
+        best_conf=best_conf,
+        best_throughput=best_tp,
+        n_explored=trace.n_trials,
+        final_conf=conf,
+        dvfs_levels=best_levels,
+    )

@@ -20,6 +20,7 @@ worth paying Algorithm 2's online exploration cost again?".
 """
 
 from .autotuner import (
+    DRIFT_KINDS,
     ContinuousShisha,
     Drift,
     DriftDetector,
@@ -62,6 +63,7 @@ from .traffic import (
 __all__ = [
     "CoServeResult",
     "ContinuousShisha",
+    "DRIFT_KINDS",
     "DiurnalTraffic",
     "Drift",
     "DriftDetector",

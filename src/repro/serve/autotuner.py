@@ -3,20 +3,33 @@
 Static Shisha tunes once against a steady-state oracle and stops; this
 module closes the loop the paper's "online" framing implies.  A
 :class:`DriftDetector` watches the per-stage times a monitor observes and
-classifies three kinds of drift:
+classifies drift into the closed :data:`DRIFT_KINDS` set:
 
   * ``dropout``    — an EP the configuration uses has died (the paper's
                      elastic-rescale case, cf. ``runtime.fault.ElasticScheduler``);
   * ``slowdown``   — a runtime derate (:class:`~repro.pipeline.hetero.EPDerates`)
                      on an in-use EP crossed a threshold (straggler, cf.
                      ``runtime.fault.StragglerMitigator``);
+  * ``throttle``   — the derate on an in-use EP *oscillates* (engage /
+                     release / re-engage): the signature of hysteretic
+                     thermal throttling (:mod:`repro.power.thermal`), not a
+                     sick host.  The detector learns this from its bounded
+                     per-EP derate history, so the first engagement is
+                     conservatively classified as a slowdown;
   * ``imbalance``  — the bottleneck shifted: max/median observed stage time
                      exceeds a threshold even without an attributable derate.
 
-A fourth kind, ``recovery``, is raised by :class:`ContinuousShisha` itself
+A further kind, ``recovery``, is raised by :class:`ContinuousShisha` itself
 when the drift state *eases* (a derate shrinks or a dead EP revives): the
 detector only sees degradation, but recovered hardware is worth re-seeding
 for — the current schedule was tuned around it.
+
+Responses differ by kind: ``throttle`` takes a cheap fast path — a DVFS
+step-down of the hot EPs (one paid measurement, configuration unchanged)
+when the platform carries a :class:`~repro.power.PowerModel` with frequency
+headroom — because a full Algorithm 2 re-tune would chase a moving target:
+the throttle clears as the chiplet cools and re-engages as it reheats.
+Every other kind runs the full exploration below.
 
 On drift, :class:`ContinuousShisha` rebuilds its *model* platform (original
 EP specs scaled by the observed derates, dead EPs buried at the bottom of
@@ -36,6 +49,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from collections import deque
 from typing import Callable, FrozenSet, Sequence
 
 from ..core.config import PipelineConfig
@@ -84,10 +98,25 @@ def drifted_platform(platform: Platform, drift: EPDerates, dead: FrozenSet[int] 
     return dataclasses.replace(platform, name=f"{platform.name}~drift", eps=tuple(eps))
 
 
+#: the closed set of drift classifications.  Validated in
+#: :meth:`Drift.__post_init__`, so growing the taxonomy (as ``"throttle"``
+#: did) is a checked change here rather than a stringly-typed drive-by.
+DRIFT_KINDS = frozenset({"dropout", "slowdown", "throttle", "imbalance", "recovery"})
+
+
 @dataclasses.dataclass
 class Drift:
-    kind: str  # "dropout" | "slowdown" | "imbalance"
+    #: one of :data:`DRIFT_KINDS`
+    kind: str
     detail: str
+    #: EP indices implicated, when attributable per-EP (throttle/slowdown)
+    eps: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if self.kind not in DRIFT_KINDS:
+            raise ValueError(
+                f"unknown drift kind {self.kind!r}; known: {sorted(DRIFT_KINDS)}"
+            )
 
 
 @dataclasses.dataclass
@@ -103,6 +132,41 @@ class DriftDetector:
 
     slowdown_threshold: float = 1.3
     imbalance_threshold: float = 1.5
+    #: derate samples kept per EP for oscillation (throttle) classification
+    throttle_window: int = 6
+
+    def __post_init__(self):
+        self._factor_history: dict[int, deque] = {}
+
+    def _record(self, factors: Sequence[float]) -> None:
+        for ep, f in enumerate(factors):
+            h = self._factor_history.get(ep)
+            if h is None:
+                h = self._factor_history[ep] = deque(maxlen=self.throttle_window)
+            h.append(f)
+
+    def _oscillating(self, ep: int) -> bool:
+        """The EP's derate history shows at least one rise AND one fall.
+
+        A step slowdown only ever rises (then holds); hysteretic thermal
+        throttling engages, releases, re-engages — the direction reversal
+        is its fingerprint.  Needs three samples, so the first engagement
+        is conservatively classified as a slowdown: the detector *learns*
+        the oscillation.
+        """
+        h = self._factor_history.get(ep)
+        if h is None or len(h) < 3:
+            return False
+        rose = fell = False
+        prev = None
+        for f in h:
+            if prev is not None:
+                if f > prev + 1e-9:
+                    rose = True
+                elif f < prev - 1e-9:
+                    fell = True
+            prev = f
+        return rose and fell
 
     def detect(
         self,
@@ -112,9 +176,10 @@ class DriftDetector:
         dead: FrozenSet[int],
         expected_times: Sequence[float] | None = None,
     ) -> Drift | None:
+        self._record(drift.factors)
         dead_in_use = [ep for ep in conf.eps if ep in dead]
         if dead_in_use:
-            return Drift("dropout", f"dead EPs in use: {dead_in_use}")
+            return Drift("dropout", f"dead EPs in use: {dead_in_use}", eps=tuple(dead_in_use))
         # a factors tuple may be shorter than the platform (e.g. a stale
         # monitor snapshot after an elastic re-partition grew the EP set);
         # missing entries mean "no derate observed", exactly like
@@ -126,7 +191,14 @@ class DriftDetector:
             > self.slowdown_threshold
         ]
         if slowed:
-            return Drift("slowdown", f"derated EPs in use: {slowed}")
+            throttling = [ep for ep in slowed if self._oscillating(ep)]
+            if throttling and len(throttling) == len(slowed):
+                return Drift(
+                    "throttle",
+                    f"oscillating derate on EPs {throttling} (thermal signature)",
+                    eps=tuple(throttling),
+                )
+            return Drift("slowdown", f"derated EPs in use: {slowed}", eps=tuple(slowed))
         if expected_times is not None and len(expected_times) == len(observed_times):
             worst, stage = 1.0, None
             for s, (obs, exp) in enumerate(zip(observed_times, expected_times)):
@@ -145,6 +217,14 @@ class Retune:
     during that window the pipeline keeps serving on the *old* configuration
     — the paper's measurement batches are real traffic — and only the final
     ``downtime`` (weights shipped to their new EPs) stalls admission.
+
+    ``kind`` is the :data:`DRIFT_KINDS` classification that triggered the
+    re-tune — ``"dropout"`` / ``"slowdown"`` / ``"throttle"`` /
+    ``"imbalance"`` / ``"recovery"`` — or ``"repartition"`` when an elastic
+    co-simulator forced it after moving the EP partition itself (no drift
+    event; the schedule is simply for the wrong machine).  A ``"throttle"``
+    retune keeps ``conf`` unchanged and carries the stepped-down
+    ``dvfs_levels`` instead.
     """
 
     conf: PipelineConfig
@@ -158,6 +238,9 @@ class Retune:
     #: per-stage max micro-batch found by the batch-knob search (None keeps
     #: the simulator's flat ``max_batch``)
     batch_policy: tuple[int, ...] | None = None
+    #: per-EP DVFS level vector to install with the new configuration
+    #: (None leaves the power model's current levels in force)
+    dvfs_levels: tuple[int, ...] | None = None
 
     @property
     def cost(self) -> float:
@@ -244,6 +327,10 @@ class ContinuousShisha:
     batch_latency_margin: float = 0.5
     #: enable Algorithm 2's fabric-aware EP-relocation moves in re-tunes
     placement: bool = False
+    #: explore per-EP DVFS levels in re-tunes (needs a platform power
+    #: model); independent of the throttle fast path, which only needs the
+    #: power model itself
+    dvfs: bool = False
     #: live co-tenant flow set (node-space) the *model* evaluator prices
     #: transfers against — set by a contention-aware co-simulator each
     #: monitor window; empty = contention-blind tuning
@@ -263,6 +350,9 @@ class ContinuousShisha:
         self._handled: tuple = ((1.0,) * self.platform.n_eps, frozenset())
         self._model_ev = self.make_evaluator(self.platform)
         self.history: list[Retune] = []
+        #: kind of the last response issued; a throttle's subsequent easing
+        #: is the step-down working, not hardware worth re-seeding for
+        self._last_kind: str | None = None
 
     def observe(
         self,
@@ -286,6 +376,12 @@ class ContinuousShisha:
                 f < pf - 1e-9 for f, pf in zip(drift.factors, prev_factors)
             )
             revived = bool(set(prev_dead) - set(dead))
+            if (eased or revived) and self._last_kind == "throttle" and not revived:
+                # expected easing: the DVFS step-down (or the cooling it
+                # bought) cleared the throttle derate — re-seeding for it
+                # would thrash against the thermal cycle
+                self._handled = fingerprint
+                return None
             if eased or revived:
                 event = Drift("recovery", "platform sped up; re-seeding to reclaim it")
         if event is None:
@@ -294,9 +390,85 @@ class ContinuousShisha:
             return None
         if t - self._last_t < self.cooldown:
             return None
+        if event.kind == "throttle":
+            retune = self._dvfs_stepdown(event, drift, dead, conf)
+            if retune is not None:
+                self._last_t = t
+                self._handled = fingerprint
+                self._last_kind = "throttle"
+                return retune
+            # no power model or no frequency headroom left: fall through to
+            # the full re-tune, which can move work off the hot chiplet
         retune = self._explore(drift, dead, event.kind, warm_conf=conf)
         self._last_t = t
         self._handled = fingerprint
+        self._last_kind = event.kind
+        return retune
+
+    def _dvfs_stepdown(
+        self,
+        event: Drift,
+        drift: EPDerates,
+        dead: FrozenSet[int],
+        warm_conf: PipelineConfig,
+    ) -> Retune | None:
+        """Throttle fast path: drop the hot EPs one DVFS level.
+
+        One paid measurement at the new clocks instead of a full Algorithm 2
+        exploration — the configuration is untouched, only the frequency
+        vector moves.  Returns None (caller escalates to :meth:`_explore`)
+        when the platform has no power model or every implicated EP is
+        already at its floor.
+        """
+        pm = self.platform.power
+        if pm is None:
+            return None
+        hot = [ep for ep in event.eps if ep < pm.n_eps and pm.can_step_down(ep)]
+        if not hot:
+            return None
+        # price the step-down on a model where the throttle derate on the
+        # stepped EPs is cleared — removing it is the point of stepping down
+        hot_set = set(hot)
+        relieved = EPDerates(
+            factors=tuple(
+                1.0 if i in hot_set else f for i, f in enumerate(drift.factors)
+            )
+        )
+        model = drifted_platform(self.platform, relieved, dead)
+        model_ev = self.make_evaluator(model)
+        if self.background_flows and model.fabric is not None:
+            model_ev.background_flows = tuple(self.background_flows)
+        trace = Trace(
+            model_ev,
+            measure_batches=self.measure_batches,
+            reconfig_overhead=self.reconfig_overhead,
+            telemetry=self.telemetry,
+        )
+        for ep in hot:
+            pm.set_level(ep, pm.level(ep) + 1)
+        tp = trace.execute(warm_conf)  # one paid measurement at the new clocks
+        tl = self.telemetry
+        if tl is not None and tl.enabled:
+            tl.counter("tune.moves.dvfs_down").inc(len(hot))
+        levels = pm.snapshot()
+        result = TuneResult(
+            best_conf=warm_conf,
+            best_throughput=tp,
+            n_explored=trace.n_trials,
+            final_conf=warm_conf,
+            dvfs_levels=levels,
+        )
+        self._model_ev = model_ev
+        retune = Retune(
+            conf=warm_conf,
+            tuning_cost=trace.wall,
+            downtime=self.reconfig_downtime,
+            kind="throttle",
+            model_throughput=tp,
+            tune_result=result,
+            dvfs_levels=levels,
+        )
+        self.history.append(retune)
         return retune
 
     def _explore(
@@ -340,6 +512,7 @@ class ContinuousShisha:
                 balancing=self.balancing,
                 placement=self.placement,
                 placement_exclude=frozenset(dead),
+                dvfs=self.dvfs,
             )
         else:
             # warm start from the serving configuration (paper's online mode)
@@ -350,6 +523,7 @@ class ContinuousShisha:
                 balancing=self.balancing,
                 placement=self.placement,
                 placement_exclude=frozenset(dead),
+                dvfs=self.dvfs,
             )
         policy = None
         if self.batch_policy_search and self.slo is not None:
@@ -370,6 +544,7 @@ class ContinuousShisha:
             model_throughput=result.best_throughput,
             tune_result=result,
             batch_policy=policy,
+            dvfs_levels=result.dvfs_levels,
         )
         self.history.append(retune)
         return retune
@@ -409,4 +584,5 @@ class ContinuousShisha:
         retune = self._explore(drift, dead, kind)
         self._last_t = t
         self._handled = (drift.factors, frozenset(dead))
+        self._last_kind = kind
         return retune

@@ -131,10 +131,21 @@ def subplatform(platform: Platform, ep_idxs: Sequence[int], name: str) -> Platfo
     An attached fabric is restricted, not rebuilt: the tenant's transfers
     still route over the *global* topology (through routers of chiplets it
     does not own), which is exactly what lets co-tenant flows contend.
+
+    An attached power model is restricted to a per-lane copy carrying the
+    owned EPs' current DVFS levels.  Two documented simplifications: each
+    lane enforces the whole-package cap against its own draw (conservative
+    — the sum of lane draws may still exceed what any single lane sees),
+    and a lane rebuilt after a repartition restarts from the global model's
+    levels and ambient thermal state.
     """
     fabric = platform.fabric.restrict(ep_idxs) if platform.fabric is not None else None
+    power = platform.power.restrict(ep_idxs) if platform.power is not None else None
     return Platform(
-        name=name, eps=tuple(platform.eps[i] for i in ep_idxs), fabric=fabric
+        name=name,
+        eps=tuple(platform.eps[i] for i in ep_idxs),
+        fabric=fabric,
+        power=power,
     )
 
 
@@ -400,6 +411,7 @@ class SharedClockCoSimulator:
         alpha: int = 10,
         contention_aware: bool = True,
         placement: bool = False,
+        dvfs: bool = False,
         telemetry=None,
         max_bundle: int = 1,
     ):
@@ -421,6 +433,9 @@ class SharedClockCoSimulator:
         self.contention_aware = contention_aware
         #: enable Algorithm 2's placement moves in every lane re-tune
         self.placement = placement
+        #: explore per-EP DVFS levels in every lane re-tune (needs a
+        #: platform power model; lanes see restricted per-lane copies)
+        self.dvfs = dvfs
         #: exploration-cost knobs for the lanes' mid-flight re-tunes: fewer
         #: measurement batches / a smaller α shorten the window the old
         #: (degraded) configuration keeps serving — the Shisha trade-off
@@ -492,6 +507,7 @@ class SharedClockCoSimulator:
             measure_batches=self.measure_batches,
             alpha=self.alpha,
             placement=self.placement,
+            dvfs=self.dvfs,
         )
         self._launch[tenant.name] = {
             "conf_pretty": conf.pretty([ep.name for ep in sub.eps]),
@@ -969,6 +985,20 @@ class CoServeResult:
     def aggregate_throughput_rps(self) -> float:
         return sum(r.sim.throughput_rps for r in self.results)
 
+    @property
+    def aggregate_energy_j(self) -> float | None:
+        """Total package joules across tenants (None without power models)."""
+        vals = [
+            r.sim.power["energy_j"] for r in self.results if r.sim.power is not None
+        ]
+        return sum(vals) if vals else None
+
+    @property
+    def joules_per_request(self) -> float | None:
+        energy = self.aggregate_energy_j
+        done = sum(r.sim.n_completed for r in self.results)
+        return energy / done if energy is not None and done else None
+
 
 def co_serve(
     platform: Platform,
@@ -987,6 +1017,7 @@ def co_serve(
     alpha: int = 10,
     contention_aware: bool = True,
     placement: bool = False,
+    dvfs: bool = False,
     faults: Sequence[tuple] | None = None,
     telemetry=None,
     max_bundle: int = 1,
@@ -1016,6 +1047,7 @@ def co_serve(
         alpha=alpha,
         contention_aware=contention_aware,
         placement=placement,
+        dvfs=dvfs,
         telemetry=telemetry,
         max_bundle=max_bundle,
     )

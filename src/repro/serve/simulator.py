@@ -39,6 +39,19 @@ Model (paper terms in parentheses):
     expensive explorer would serve degraded for far longer before
     recovering.
 
+  * When the platform carries a power model
+    (:class:`~repro.power.PowerModel`), the simulator integrates energy on
+    the simulated clock — dynamic joules over each EP's busy time, static
+    leakage over the whole window — and, if a thermal model is attached,
+    steps the per-chiplet RC nodes once per monitor window.  A chiplet that
+    crosses its hot threshold throttles (stage times derate) until it
+    cools; the throttle derate composes with the fault drift in the vector
+    the autotuner observes, which is how ``"throttle"`` drift reaches the
+    :class:`~repro.serve.autotuner.DriftDetector`.  Results gain a
+    ``power`` block (joules/request, peak package watts); telemetry gains
+    ``power.*``/``thermal.*`` metrics and per-chiplet temperature counter
+    tracks.
+
 Determinism: the simulator owns no randomness at all; all stochasticity
 lives in the seeded ``traffic`` generators, so a (traffic, scenario) pair
 replays bit-identically.
@@ -56,6 +69,7 @@ from ..core.config import PipelineConfig
 from ..core.evaluator import AnalyticEvaluator
 from ..pipeline.hetero import EPDerates
 from ..telemetry import live
+from ..telemetry.tracer import TraceEvent
 
 # event kinds, in tie-break priority order at equal timestamps
 _ARRIVAL, _DONE, _PLATFORM, _MONITOR, _RECONFIG = range(5)
@@ -172,6 +186,10 @@ class SimResult:
     reconfigs: list[dict]
     #: (t, queued + in-flight) sampled at every monitor tick
     load_samples: list[tuple[float, int]]
+    #: energy/thermal accounting when the platform carries a power model
+    #: (energy_j, joules_per_request, peak_package_w, avg_package_w, cap_w,
+    #: throttle_events, max_temp_c, dvfs_levels); None otherwise
+    power: dict | None = None
 
     def summary(self) -> str:
         return (
@@ -249,6 +267,59 @@ class ServingSimulator:
         self._reconfigs: list[dict] = []
         self._load_samples: list[tuple[float, int]] = []
         self._scripted: list[tuple[float, Callable]] = []
+        #: attached power model or None; energy integrates over monitor
+        #: windows (dynamic joules over busy seconds, leakage over the
+        #: whole window), thermal nodes step on the same cadence
+        self.power = evaluator.platform.power
+        self._thermal_factors: list[float] | None = None
+        self._init_power_state(n_eps)
+        self._bind_metrics()
+
+    def _init_power_state(self, n_eps: int) -> None:
+        self._last_power_t = 0.0
+        self._energy_j = 0.0
+        self._peak_w = 0.0
+        self._max_temp_c: float | None = None
+        self._throttle_events = 0
+        self._busy_since_tick = [0.0] * n_eps
+        pm = self.power
+        if pm is not None and pm.thermal is not None:
+            self._thermal_factors = [pm.thermal.factor(e) for e in range(n_eps)]
+        else:
+            self._thermal_factors = None
+
+    def _bind_metrics(self) -> None:
+        """Pre-resolve the hot-path metric handles and track labels.
+
+        The per-event cost of recording is then one attribute load + method
+        call instead of an f-string build and a registry lookup — the serve
+        benchmark's instrumented/bare ratio is pinned by a floor test on
+        this staying cheap.  Handles are label-keyed and stable; the
+        per-stage track labels depend on the configuration and are rebuilt
+        on every install (see ``_apply_reconfig``).
+        """
+        tl = self.telemetry
+        if tl is None:
+            return
+        label = self.label
+        #: direct append target for the per-batch/per-request span rows —
+        #: identical TraceEvent records, minus two delegation layers per
+        #: event (Telemetry.span -> SpanTracer.span -> append)
+        self._trace_append = tl.tracer.events.append
+        self._m_batch_size = tl.histogram(f"{label}.batch_size")
+        self._m_arrivals = tl.counter(f"{label}.arrivals")
+        self._m_slo_hit = tl.counter(f"{label}.slo.hit")
+        self._m_slo_miss = tl.counter(f"{label}.slo.miss")
+        self._m_latency = tl.histogram(f"{label}.latency_s")
+        self._m_queue_depth = tl.histogram(f"{label}.queue_depth")
+        self._m_in_system = tl.gauge(f"{label}.in_system")
+        self._bind_stage_tracks()
+
+    def _bind_stage_tracks(self) -> None:
+        #: (span name, EP track) per stage of the current configuration
+        self._stage_tracks = [
+            (f"stage{s}", f"ep{e}") for s, e in enumerate(self.conf.eps)
+        ]
 
     def _policy(self, policy: Sequence[int] | None, depth: int) -> tuple[int, ...]:
         if policy is None:
@@ -323,7 +394,12 @@ class ServingSimulator:
         self.loop.push(t, kind, self, payload)
 
     def _effective_time(self, stage: int) -> float:
-        return self.drift.scale(self.conf.eps[stage], self._base_times[stage])
+        ep = self.conf.eps[stage]
+        t = self.drift.scale(ep, self._base_times[stage])
+        tf = self._thermal_factors
+        if tf is not None:
+            t *= tf[ep]
+        return t
 
     def observed_stage_times(self) -> list[float]:
         """What a monitor sees: drifted stage times, inf for dead EPs."""
@@ -344,9 +420,8 @@ class ServingSimulator:
             if math.isnan(r.t_start):
                 r.t_start = t
         st.busy, st.batch, st.service_dt = True, batch, dt
-        tl = self.telemetry
-        if tl is not None:
-            tl.histogram(f"{self.label}.batch_size").observe(b)
+        if self.telemetry is not None:
+            self._m_batch_size.observe(b)
         self._push(t + dt, _DONE, (stage, st.token, self._epoch))
 
     def _on_done(self, t: float, stage: int, token: int, epoch: int) -> None:
@@ -356,20 +431,26 @@ class ServingSimulator:
         if token != st.token:
             return  # cancelled (dropout)
         st.busy = False
-        self._busy_time[self.conf.eps[stage]] += st.service_dt
+        ep = self.conf.eps[stage]
+        self._busy_time[ep] += st.service_dt
+        if self.power is not None:
+            self._busy_since_tick[ep] += st.service_dt
         batch, st.batch = st.batch or [], None
         tl = self.telemetry
         if tl is not None and batch:
             # one span per served batch, on the hosting EP's track — the
             # "stage hop" leg of every member request's lifecycle
-            tl.span(
-                f"stage{stage}",
-                t - st.service_dt,
-                st.service_dt,
-                cat="request",
-                pid=self.label,
-                tid=f"ep{self.conf.eps[stage]}",
-                args={"stage": stage, "batch": len(batch)},
+            span_name, ep_track = self._stage_tracks[stage]
+            self._trace_append(
+                TraceEvent(
+                    t - st.service_dt,
+                    span_name,
+                    "request",
+                    self.label,
+                    ep_track,
+                    st.service_dt,
+                    {"stage": stage, "batch": len(batch)},
+                )
             )
         if stage == self.conf.depth - 1:
             for r in batch:
@@ -377,20 +458,22 @@ class ServingSimulator:
                 self._completed.append(r)
                 if tl is not None:
                     ok = r.latency <= self.slo
-                    tl.counter(f"{self.label}.slo.{'hit' if ok else 'miss'}").inc()
-                    tl.histogram(f"{self.label}.latency_s").observe(r.latency)
-                    tl.span(
-                        "request",
-                        r.t_arrival,
-                        r.latency,
-                        cat="request",
-                        pid=self.label,
-                        tid="requests",
-                        args={
-                            "rid": r.rid,
-                            "wait_s": r.t_start - r.t_arrival,
-                            "slo_ok": ok,
-                        },
+                    (self._m_slo_hit if ok else self._m_slo_miss).inc()
+                    self._m_latency.observe(r.latency)
+                    self._trace_append(
+                        TraceEvent(
+                            r.t_arrival,
+                            "request",
+                            "request",
+                            self.label,
+                            "requests",
+                            r.latency,
+                            {
+                                "rid": r.rid,
+                                "wait_s": r.t_start - r.t_arrival,
+                                "slo_ok": ok,
+                            },
+                        )
                     )
         else:
             self._stages[stage + 1].queue.extend(batch)
@@ -455,10 +538,25 @@ class ServingSimulator:
             # ground-truth evaluator and re-base drift/dead/occupancy to the
             # new local index space
             self._fold_busy_time()
+            if self.power is not None:
+                # settle the energy window against the outgoing power model
+                # (joules are package-level scalars, so they survive the
+                # index-space change; thermal state restarts with the
+                # incoming restricted model)
+                self._step_power(t)
             self.evaluator = replatform.evaluator
             self.drift = replatform.drift
             self.dead = set(replatform.dead)
             self._busy_time = [0.0] * self.evaluator.platform.n_eps
+            self.power = self.evaluator.platform.power
+            self._busy_since_tick = [0.0] * self.evaluator.platform.n_eps
+            pm = self.power
+            if pm is not None and pm.thermal is not None:
+                self._thermal_factors = [
+                    pm.thermal.factor(e) for e in range(pm.n_eps)
+                ]
+            else:
+                self._thermal_factors = None
             if self.telemetry is not None:
                 # the swapped-in evaluator carries a freshly restricted
                 # fabric: re-attach the session so routing passes keep
@@ -468,6 +566,14 @@ class ServingSimulator:
                     fabric.telemetry = self.telemetry
         old_policy = self.batch_policy
         self.conf = retune.conf
+        if retune.dvfs_levels is not None and self.power is not None:
+            # the tuner's adopted frequency vector takes force at install
+            # time, with the new configuration (base times below are
+            # recomputed under it); the energy window settles first so busy
+            # seconds already served are priced at the old draw
+            if len(retune.dvfs_levels) == self.power.n_eps:
+                self._step_power(t)
+                self.power.restore(retune.dvfs_levels)
         if retune.batch_policy is not None:
             policy = retune.batch_policy
         elif len(old_policy) == self.conf.depth:
@@ -483,6 +589,7 @@ class ServingSimulator:
         self._stall_until = t + retune.downtime
         tl = self.telemetry
         if tl is not None:
+            self._bind_stage_tracks()
             tl.instant(
                 "install",
                 t,
@@ -498,20 +605,82 @@ class ServingSimulator:
             )
         self._push(self._stall_until, _PLATFORM, lambda sim, now: sim._try_start(0, now))
 
+    def _step_power(self, t: float) -> None:
+        """Settle the energy/thermal window ``[_last_power_t, t]``.
+
+        Dynamic joules accrue over each EP's busy seconds at its current
+        DVFS level's draw (reduced while thermally throttled — the forced
+        clock dip burns less); static leakage accrues over the whole
+        window.  Thermal RC nodes step once with the window-average draw,
+        and the resulting throttle derates take force for the next window.
+        """
+        pm = self.power
+        window = t - self._last_power_t
+        if window <= 0.0:
+            return
+        self._last_power_t = t
+        th = pm.thermal
+        tl = self.telemetry
+        busy = self._busy_since_tick
+        eps = self.evaluator.platform.eps
+        throttles_before = th.throttle_events if th is not None else 0
+        window_j = 0.0
+        for ep in range(len(busy)):
+            w = pm.dynamic_w(ep)
+            if th is not None and th.throttled[ep]:
+                w /= th.electrical_derate
+            e = busy[ep] * w + pm.static_w(ep) * window
+            window_j += e
+            if th is not None:
+                self._thermal_factors[ep] = th.step(ep, e / window, window)
+                if tl is not None:
+                    tl.counter_track(
+                        f"thermal.temp_c:{eps[ep].name}",
+                        t,
+                        th.temps[ep],
+                        pid=self.label,
+                    )
+            busy[ep] = 0.0
+        self._energy_j += window_j
+        w_avg = window_j / window
+        if w_avg > self._peak_w:
+            self._peak_w = w_avg
+        if th is not None:
+            hottest = max(th.temps)
+            if self._max_temp_c is None or hottest > self._max_temp_c:
+                self._max_temp_c = hottest
+            self._throttle_events += th.throttle_events - throttles_before
+        if tl is not None:
+            tl.histogram("power.package_w").observe(w_avg)
+            tl.counter("power.energy_j").inc(window_j)
+            tl.counter_track("power.package_w", t, w_avg, pid=self.label)
+            if th is not None and th.throttle_events > throttles_before:
+                tl.counter("thermal.throttles").inc(
+                    th.throttle_events - throttles_before
+                )
+
     def _on_monitor(self, t: float, horizon: float) -> None:
-        in_system = sum(len(st.queue) for st in self._stages) + sum(
+        if self.power is not None:
+            self._step_power(t)
+        queued = sum(len(st.queue) for st in self._stages)
+        in_system = queued + sum(
             len(st.batch or []) for st in self._stages if st.busy
         )
         self._load_samples.append((t, in_system))
-        tl = self.telemetry
-        if tl is not None:
-            tl.histogram(f"{self.label}.queue_depth").observe(
-                sum(len(st.queue) for st in self._stages)
-            )
-            tl.gauge(f"{self.label}.in_system").set(in_system)
+        if self.telemetry is not None:
+            self._m_queue_depth.observe(queued)
+            self._m_in_system.set(in_system)
         if self.autotuner is not None and t >= self._stall_until and t >= self._retuning_until:
+            drift = self.drift
+            tf = self._thermal_factors
+            if tf is not None:
+                # the monitor cannot tell a hot chiplet from a sick one by
+                # looking at one sample: the observed derate is the product
+                # of fault drift and thermal throttle, and it is the
+                # *detector's* job to classify the composite
+                drift = drift.compose(EPDerates(factors=tuple(tf)))
             retune = self.autotuner.observe(
-                t, self.conf, self.observed_stage_times(), self.drift, frozenset(self.dead)
+                t, self.conf, self.observed_stage_times(), drift, frozenset(self.dead)
             )
             if retune is not None:
                 self._begin_reconfig(t, retune)
@@ -534,9 +703,8 @@ class ServingSimulator:
         """Handle one event; called by whichever loop owns the clock."""
         if kind == _ARRIVAL:
             self._n_arrived += 1
-            tl = self.telemetry
-            if tl is not None:
-                tl.counter(f"{self.label}.arrivals").inc()
+            if self.telemetry is not None:
+                self._m_arrivals.inc()
             self._stages[0].queue.append(payload)
             self._try_start(0, t)
         elif kind == _DONE:
@@ -553,7 +721,26 @@ class ServingSimulator:
         self.loop.run(horizon)
         return self._result(horizon)
 
+    def _power_result(self, horizon: float) -> dict | None:
+        pm = self.power
+        if pm is None:
+            return None
+        self._step_power(horizon)  # settle the final partial window
+        done = len(self._completed)
+        return {
+            "energy_j": self._energy_j,
+            "joules_per_request": self._energy_j / done if done else None,
+            "peak_package_w": self._peak_w,
+            "avg_package_w": self._energy_j / horizon if horizon > 0 else 0.0,
+            # None (not inf) when uncapped, so the block stays strict-JSON
+            "cap_w": pm.cap_w if math.isfinite(pm.cap_w) else None,
+            "throttle_events": self._throttle_events,
+            "max_temp_c": self._max_temp_c,
+            "dvfs_levels": list(pm.snapshot()),
+        }
+
     def _result(self, horizon: float) -> SimResult:
+        power = self._power_result(horizon)
         lats = sorted(r.latency for r in self._completed)
         n_in_flight = sum(len(st.batch or []) for st in self._stages if st.busy)
         n_queued = sum(len(st.queue) for st in self._stages)
@@ -586,6 +773,7 @@ class ServingSimulator:
             occupancy=occ,
             reconfigs=self._reconfigs,
             load_samples=self._load_samples,
+            power=power,
         )
 
     def result(self, horizon: float) -> SimResult:

@@ -96,6 +96,10 @@ class Telemetry:
     def instant(self, name: str, ts: float, **kw) -> None:
         self.tracer.instant(name, ts, **kw)
 
+    def counter_track(self, name: str, ts: float, value: float, **kw) -> None:
+        """One sample of a Perfetto counter track (temperature, watts)."""
+        self.tracer.counter(name, ts, value, **kw)
+
     # -- profiling hooks -----------------------------------------------------
 
     def timed(self, scope: str) -> _Timer:
@@ -185,6 +189,9 @@ class NullTelemetry(Telemetry):
         pass
 
     def instant(self, name: str, ts: float, **kw) -> None:
+        pass
+
+    def counter_track(self, name: str, ts: float, value: float, **kw) -> None:
         pass
 
     def timed(self, scope: str) -> _NullTimer:

@@ -17,7 +17,10 @@ Two export formats:
     first-seen order, with ``process_name``/``thread_name`` metadata events
     emitted first, so tenants render as processes and EPs/links as named
     tracks.  Timestamps are exported in microseconds, spans as complete
-    (``"ph": "X"``) events, instants as ``"ph": "i"``.
+    (``"ph": "X"``) events, instants as ``"ph": "i"``, counter samples
+    (:meth:`SpanTracer.counter` — e.g. per-chiplet temperature) as
+    ``"ph": "C"``, which Perfetto renders as a value track per counter
+    name.
 """
 
 from __future__ import annotations
@@ -27,9 +30,15 @@ import json
 from pathlib import Path
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class TraceEvent:
-    """One span (``dur`` set) or instant (``dur`` None) on the timeline."""
+    """One span (``dur`` set), instant (``dur`` None) or counter sample
+    (``ph == "C"``) on the timeline.
+
+    Slotted: serving hot paths construct one of these per batch and per
+    completed request (they append straight to ``SpanTracer.events`` — see
+    ``ServingSimulator._bind_metrics``), so construction cost is part of
+    the instrumented/bare overhead ratio the selfbench floor test pins."""
 
     ts: float  # simulated seconds
     name: str
@@ -38,6 +47,9 @@ class TraceEvent:
     tid: str
     dur: float | None = None
     args: dict | None = None
+    #: explicit Chrome phase override; only ``"C"`` (counter) is used —
+    #: spans and instants keep inferring their phase from ``dur``
+    ph: str | None = None
 
 
 class SpanTracer:
@@ -71,6 +83,26 @@ class SpanTracer:
     ) -> None:
         self.events.append(TraceEvent(ts, name, cat, pid, tid, None, args))
 
+    def counter(
+        self,
+        name: str,
+        ts: float,
+        value: float,
+        *,
+        cat: str = "counter",
+        pid: str = "sim",
+        tid: str = "counters",
+    ) -> None:
+        """One sample of a numeric track (Chrome ``"C"`` phase).
+
+        Perfetto groups samples by (pid, name) into a stairstep value
+        track — how per-chiplet temperatures and package watts render
+        alongside the request spans.
+        """
+        self.events.append(
+            TraceEvent(ts, name, cat, pid, tid, None, {"value": value}, "C")
+        )
+
     def __len__(self) -> int:
         return len(self.events)
 
@@ -89,6 +121,8 @@ class SpanTracer:
             }
             if e.dur is not None:
                 row["dur"] = e.dur
+            if e.ph is not None:
+                row["ph"] = e.ph
             if e.args:
                 row["args"] = e.args
             lines.append(json.dumps(row, sort_keys=True, separators=(",", ":")))
@@ -142,7 +176,9 @@ class SpanTracer:
                 "tid": tid_of(e.pid, e.tid),
                 "ts": round(e.ts * 1e6, 3),
             }
-            if e.dur is None:
+            if e.ph is not None:
+                row["ph"] = e.ph
+            elif e.dur is None:
                 row["ph"] = "i"
                 row["s"] = "t"
             else:

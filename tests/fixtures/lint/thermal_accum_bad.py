@@ -1,0 +1,12 @@
+"""Violates wall-clock and float-accum: a thermal integrator that reads
+real time for its step and folds per-chiplet heat in set order."""
+import time
+
+
+def integrate(temps, heat_w, r, c, last):
+    now = time.perf_counter()
+    dt = now - last
+    package_w = sum({w * 1.0 for w in heat_w})
+    for i, t in enumerate(temps):
+        temps[i] = t + (package_w * r - t) * dt / (r * c)
+    return now

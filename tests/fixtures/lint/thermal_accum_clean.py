@@ -1,0 +1,8 @@
+"""Clean: the thermal step takes simulated dt and sums in pinned order."""
+
+
+def integrate(temps, heat_w, r, c, dt):
+    package_w = sum(sorted(w * 1.0 for w in heat_w))
+    for i, t in enumerate(temps):
+        temps[i] = t + (package_w * r - t) * dt / (r * c)
+    return dt

@@ -38,6 +38,8 @@ RULE_FIXTURES = [
     ("id-ordering", "id_ordering"),
     ("float-accum", "float_accum"),
     ("event-past", "event_past"),
+    ("wall-clock", "thermal_accum"),
+    ("float-accum", "thermal_accum"),
 ]
 
 

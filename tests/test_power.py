@@ -1,0 +1,626 @@
+"""Power/thermal co-simulation: DVFS ladders, caps, throttle drift, energy.
+
+Three contracts guarded hard, mirroring the fabric playbook:
+
+  * **degenerate identity** — attaching :func:`~repro.power.degenerate_power`
+    (one nominal level, no cap, no thermal) reproduces the power-free
+    results *bit-for-bit* across tune, serve and co_serve (the power
+    analogue of ``scalar_fabric``);
+  * **cap semantics** — ``tune(dvfs=True)`` under a binding package cap
+    steps in-use EPs down until the cap holds, pays every enforced level as
+    an online trial, and never adopts a cap-infeasible candidate;
+  * **throttle classification** — a hysteretic thermal oscillation is
+    classified ``"throttle"`` (answered by a cheap DVFS step-down), while a
+    monotone step derate stays ``"slowdown"`` (full re-tune).
+"""
+
+import json
+import math
+
+import pytest
+
+from repro.core import (
+    AnalyticEvaluator,
+    DatabaseEvaluator,
+    Trace,
+    paper_platform,
+    tune,
+    weights,
+)
+from repro.core.heuristics import run_shisha
+from repro.models.cnn import network_layers
+from repro.pipeline.hetero import EPDerates
+from repro.power import (
+    DVFSLevel,
+    EPPowerSpec,
+    PowerModel,
+    ThermalModel,
+    degenerate_power,
+    dvfs_ladder,
+    uniform_power,
+    uniform_thermal,
+)
+from repro.serve import (
+    DRIFT_KINDS,
+    ContinuousShisha,
+    Drift,
+    DriftDetector,
+    PoissonTraffic,
+    ReplayTraffic,
+    ServingSimulator,
+    Tenant,
+    co_serve,
+)
+from repro.telemetry import Telemetry
+
+
+# ---------------------------------------------------------------------------
+# model arithmetic
+# ---------------------------------------------------------------------------
+
+
+def test_dvfs_level_validation():
+    with pytest.raises(ValueError):
+        DVFSLevel("bad", scale=0.0, dynamic_w=1.0, static_w=0.1)
+    with pytest.raises(ValueError):
+        DVFSLevel("bad", scale=1.5, dynamic_w=1.0, static_w=0.1)
+    with pytest.raises(ValueError):
+        DVFSLevel("bad", scale=0.5, dynamic_w=-1.0, static_w=0.1)
+
+
+def test_spec_must_be_fastest_first():
+    lo = DVFSLevel("lo", 0.5, 1.0, 0.1)
+    hi = DVFSLevel("hi", 1.0, 8.0, 0.2)
+    with pytest.raises(ValueError):
+        EPPowerSpec(levels=(lo, hi))
+    EPPowerSpec(levels=(hi, lo))  # fastest-first is fine
+    with pytest.raises(ValueError):
+        EPPowerSpec(levels=(hi, lo), nominal=2)
+
+
+def test_ladder_follows_cubic_law():
+    levels = dvfs_ladder(16.0, 2.0, n_levels=4, min_scale=0.4)
+    assert [l.scale for l in levels] == pytest.approx([1.0, 0.8, 0.6, 0.4])
+    assert [l.scale for l in levels] == sorted(
+        (l.scale for l in levels), reverse=True
+    )
+    for l in levels:
+        assert l.dynamic_w == pytest.approx(16.0 * l.scale**3)
+        assert l.static_w == pytest.approx(2.0 * (0.5 + 0.5 * l.scale))
+
+
+def test_package_arithmetic_and_stepping():
+    pm = PowerModel(
+        specs=tuple(EPPowerSpec(dvfs_ladder(10.0, 1.0)) for _ in range(3)),
+        cap_w=25.0,
+    )
+    assert pm.n_eps == 3 and pm.tunable
+    assert pm.static_package_w == pytest.approx(3.0)
+    # duplicate in-use entries count once
+    assert pm.package_w([0, 0, 1]) == pytest.approx(3.0 + 20.0)
+    assert not pm.cap_feasible([0, 1, 2])  # 3 + 30 > 25
+    assert not pm.can_step_up(0)
+    pm.set_level(0, 3)
+    assert pm.can_step_up(0) and not pm.can_step_down(0)
+    assert pm.scale(0) == pytest.approx(0.4)
+    # cubic dip makes the package fit now
+    assert pm.cap_feasible([0, 1, 2])
+    snap = pm.snapshot()
+    assert snap == (3, 0, 0)
+    pm.set_level(0, 0)
+    pm.restore(snap)
+    assert pm.level(0) == 3
+    with pytest.raises(ValueError):
+        pm.set_level(0, 9)
+    with pytest.raises(ValueError):
+        pm.restore((0, 0))
+
+
+def test_restrict_carries_levels_and_platform_without():
+    plat = paper_platform(4)
+    pm = uniform_power(plat, cap_w=100.0, thermal=uniform_thermal(4, seed=7))
+    pm.set_level(2, 1)
+    pm.thermal.temps[2] = 60.0
+    sub = pm.restrict([1, 2])
+    assert sub.n_eps == 2 and sub.cap_w == 100.0
+    assert sub.snapshot() == (0, 1)
+    assert sub.thermal.temps == [pm.thermal.temps[1], 60.0]
+    # Platform.without routes through the same restriction
+    smaller = plat.with_power(pm).without([0, 3])
+    assert smaller.power.n_eps == 2
+    assert smaller.power.snapshot() == (0, 1)
+
+
+def test_degenerate_model_is_identity():
+    plat = paper_platform(4)
+    pm = degenerate_power(plat)
+    assert not pm.tunable
+    assert math.isinf(pm.cap_w)
+    for ep in range(4):
+        assert pm.scale(ep) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# evaluator scaling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("evaluator_cls", [AnalyticEvaluator, DatabaseEvaluator])
+def test_dvfs_scale_divides_stage_times(evaluator_cls):
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    pm = uniform_power(plat)
+    conf = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3"
+    ).result.best_conf
+    ev = evaluator_cls(plat.with_power(pm), layers)
+    nominal = ev.stage_times(conf)
+    pm.set_level(conf.eps[0], 2)  # scale 0.6 on stage 0's EP
+    scaled = ev.stage_times(conf)
+    # stage 0 slowed; compute share grew by exactly 1/scale, link share fixed
+    assert scaled[0] > nominal[0]
+    for s in range(1, conf.depth):
+        assert scaled[s] == nominal[s]
+    pm.set_level(conf.eps[0], 0)
+    assert ev.stage_times(conf) == nominal
+
+
+@pytest.mark.parametrize("evaluator_cls", [AnalyticEvaluator, DatabaseEvaluator])
+def test_degenerate_power_tune_is_bit_for_bit(evaluator_cls):
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    platp = plat.with_power(degenerate_power(plat))
+    bare = run_shisha(weights(layers), Trace(evaluator_cls(plat, layers)), "H3")
+    powered = run_shisha(weights(layers), Trace(evaluator_cls(platp, layers)), "H3")
+    assert bare.result == powered.result
+    assert [(t.conf, t.throughput, t.t_wall) for t in bare.trace.trials] == [
+        (t.conf, t.throughput, t.t_wall) for t in powered.trace.trials
+    ]
+
+
+def test_degenerate_power_dvfs_tune_matches_plain_tune():
+    # single-level ladders under a satisfied cap: dvfs=True must degrade to
+    # exactly the paper's loop, trial for trial
+    layers = network_layers("synthnet")
+    plat = paper_platform(8)
+    seed = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3"
+    ).result.best_conf
+    tr_a = Trace(DatabaseEvaluator(plat, layers))
+    tr_b = Trace(DatabaseEvaluator(plat.with_power(degenerate_power(plat)), layers))
+    a = tune(seed, tr_a, dvfs=False)
+    b = tune(seed, tr_b, dvfs=True)
+    assert (a.best_conf, a.best_throughput, a.n_explored) == (
+        b.best_conf,
+        b.best_throughput,
+        b.n_explored,
+    )
+    assert b.dvfs_levels is None  # degenerate model: nothing was tuned
+    assert [(t.conf, t.throughput, t.t_wall) for t in tr_a.trials] == [
+        (t.conf, t.throughput, t.t_wall) for t in tr_b.trials
+    ]
+
+
+# ---------------------------------------------------------------------------
+# DVFS-aware tuning under a cap
+# ---------------------------------------------------------------------------
+
+
+def test_tune_dvfs_enforces_binding_cap():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    pm = uniform_power(plat)
+    seed = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3"
+    ).result.best_conf
+    nominal_w = pm.package_w(seed.conf.eps if hasattr(seed, "conf") else seed.eps)
+    cap = 0.75 * nominal_w  # binding at nominal clocks
+    pmc = uniform_power(plat, cap_w=cap)
+    assert not pmc.cap_feasible(seed.eps)
+    trace = Trace(DatabaseEvaluator(plat.with_power(pmc), layers))
+    result = tune(seed, trace, dvfs=True)
+    assert result.dvfs_levels is not None
+    assert any(l > 0 for l in result.dvfs_levels)  # someone stepped down
+    # the adopted configuration satisfies the cap at the adopted levels
+    pmc.restore(result.dvfs_levels)
+    assert pmc.cap_feasible(result.best_conf.eps)
+    # enforcement paid online trials beyond the baseline measurement
+    assert trace.n_trials > 1
+    # and the model was left at the winning vector
+    assert pmc.snapshot() == result.dvfs_levels
+
+
+def test_tune_dvfs_loose_cap_still_returns_levels():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    pm = uniform_power(plat, cap_w=1e9)
+    seed = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat, layers)), "H3"
+    ).result.best_conf
+    result = tune(seed, Trace(DatabaseEvaluator(plat.with_power(pm), layers)), dvfs=True)
+    assert result.dvfs_levels is not None
+    assert len(result.dvfs_levels) == 4
+
+
+# ---------------------------------------------------------------------------
+# thermal RC nodes
+# ---------------------------------------------------------------------------
+
+
+def test_thermal_trajectory_deterministic_and_converges():
+    a = uniform_thermal(3, seed=5)
+    b = uniform_thermal(3, seed=5)
+    assert a.r_k_per_w == b.r_k_per_w and a.c_j_per_k == b.c_j_per_k
+    assert uniform_thermal(3, seed=6).r_k_per_w != a.r_k_per_w
+    for _ in range(500):
+        for th in (a, b):
+            th.step(0, 10.0, 1.0)
+    assert a.temps == b.temps  # bit-identical trajectory
+    target = 10.0 * a.r_k_per_w[0] + a.t_ambient_c
+    assert a.temps[0] == pytest.approx(target, rel=1e-3)
+
+
+def test_thermal_hysteresis_oscillates():
+    th = ThermalModel(
+        r_k_per_w=(5.0,),
+        c_j_per_k=(2.0,),
+        t_hot_c=85.0,
+        t_cool_c=75.0,
+    )
+    # heat: 12 W -> target 105 C, crosses t_hot
+    derates = [th.step(0, 12.0, 1.0) for _ in range(60)]
+    assert th.throttled[0] and th.throttle_events == 1
+    assert derates[-1] == th.throttle_derate
+    # cool: idle until the latch releases below t_cool (hysteresis band)
+    while th.throttled[0]:
+        th.step(0, 0.0, 1.0)
+    assert th.temps[0] <= th.t_cool_c
+    assert th.factor(0) == 1.0
+    # re-heat: second engagement
+    for _ in range(60):
+        th.step(0, 12.0, 1.0)
+    assert th.throttle_events == 2
+    # throttling burns superlinearly less than it slows
+    assert th.electrical_derate == pytest.approx(th.throttle_derate**2)
+
+
+def test_thermal_validation():
+    with pytest.raises(ValueError):
+        ThermalModel(r_k_per_w=(1.0,), c_j_per_k=(1.0, 2.0))
+    with pytest.raises(ValueError):
+        ThermalModel(r_k_per_w=(1.0,), c_j_per_k=(1.0,), t_hot_c=70.0, t_cool_c=80.0)
+    with pytest.raises(ValueError):
+        uniform_thermal(0)
+
+
+# ---------------------------------------------------------------------------
+# drift classification: throttle vs slowdown
+# ---------------------------------------------------------------------------
+
+
+def _conf_on(eps):
+    from repro.core import PipelineConfig
+
+    return PipelineConfig(stages=(2,) * len(eps), eps=tuple(eps))
+
+
+def test_drift_kind_is_validated():
+    Drift("slowdown", "ok")
+    with pytest.raises(ValueError):
+        Drift("meltdown", "nope")
+    assert "throttle" in DRIFT_KINDS
+
+
+def test_step_slowdown_stays_slowdown():
+    det = DriftDetector()
+    conf = _conf_on([0, 1])
+    flat = EPDerates(factors=(1.0, 1.0))
+    stepped = EPDerates(factors=(2.0, 1.0))
+    assert det.detect(conf, [1.0, 1.0], flat, frozenset()) is None
+    # a step derate rises once and holds: never classified as throttle
+    for _ in range(6):
+        ev = det.detect(conf, [2.0, 1.0], stepped, frozenset())
+        assert ev is not None and ev.kind == "slowdown"
+        assert ev.eps == (0,)
+
+
+def test_oscillating_derate_becomes_throttle():
+    det = DriftDetector()
+    conf = _conf_on([0, 1])
+    hot = EPDerates(factors=(1.6, 1.0))
+    cool = EPDerates(factors=(1.0, 1.0))
+    # first engagement: the detector has no reversal evidence yet
+    ev = det.detect(conf, [1.6, 1.0], hot, frozenset())
+    assert ev.kind == "slowdown"
+    # release: factors ease back (no event; easing is handled upstream)
+    det.detect(conf, [1.0, 1.0], cool, frozenset())
+    # re-engage: history [1.6, 1.0, 1.6] shows rise AND fall -> throttle
+    ev = det.detect(conf, [1.6, 1.0], hot, frozenset())
+    assert ev.kind == "throttle"
+    assert ev.eps == (0,)
+
+
+def test_mixed_step_and_oscillation_stays_slowdown():
+    # one EP oscillates, the other stepped: the composite is NOT attributed
+    # to thermal (a sick host is in there too) -> conservative "slowdown"
+    det = DriftDetector()
+    conf = _conf_on([0, 1])
+    seq = [(1.6, 1.0), (1.0, 1.0), (1.6, 2.0)]
+    ev = None
+    for f in seq:
+        ev = det.detect(conf, list(f), EPDerates(factors=f), frozenset())
+    assert ev is not None and ev.kind == "slowdown"
+    assert set(ev.eps) == {0, 1}
+
+
+def test_dropout_outranks_throttle():
+    det = DriftDetector()
+    conf = _conf_on([0, 1])
+    hot = EPDerates(factors=(1.6, 1.0))
+    det.detect(conf, [1.6, 1.0], hot, frozenset())
+    det.detect(conf, [1.0, 1.0], EPDerates(factors=(1.0, 1.0)), frozenset())
+    ev = det.detect(conf, [1.6, 1.0], hot, frozenset({1}))
+    assert ev.kind == "dropout" and ev.eps == (1,)
+
+
+# ---------------------------------------------------------------------------
+# the throttle fast path: step-down instead of re-tune
+# ---------------------------------------------------------------------------
+
+
+def _throttle_tuner(plat_p, layers):
+    return ContinuousShisha(
+        platform=plat_p,
+        layers=tuple(layers),
+        make_evaluator=lambda p: DatabaseEvaluator(p, layers),
+        cooldown=0.5,
+    )
+
+
+def test_throttle_event_answers_with_dvfs_stepdown():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    pm = uniform_power(plat)
+    plat_p = plat.with_power(pm)
+    conf = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat_p, layers)), "H3"
+    ).result.best_conf
+    tuner = _throttle_tuner(plat_p, layers)
+    hot_ep = conf.eps[0]
+    factors = [1.0] * 4
+    factors[hot_ep] = 1.6
+    hot = EPDerates(factors=tuple(factors))
+    cool = EPDerates(factors=(1.0,) * 4)
+    times = DatabaseEvaluator(plat_p, layers).stage_times(conf)
+    # engage -> slowdown (full re-tune), release, re-engage -> throttle
+    r1 = tuner.observe(1.0, conf, times, hot, frozenset())
+    assert r1 is not None and r1.kind == "slowdown"
+    # release: the easing after a full re-tune re-seeds ("recovery")
+    tuner.observe(2.0, conf, times, cool, frozenset())
+    levels_before = pm.snapshot()
+    r2 = tuner.observe(4.0, conf, times, hot, frozenset())
+    assert r2 is not None and r2.kind == "throttle"
+    # fast path: configuration untouched, frequency stepped down on the hot EP
+    assert r2.conf == conf
+    assert r2.dvfs_levels is not None
+    assert r2.dvfs_levels[hot_ep] == levels_before[hot_ep] + 1
+    # one paid measurement, not an Algorithm 2 exploration
+    assert r2.tune_result.n_explored == 1
+    assert r2.tuning_cost > 0.0
+    # the easing that follows a throttle response is benign: no recovery storm
+    assert tuner.observe(6.0, conf, times, cool, frozenset()) is None
+
+
+def test_throttle_at_frequency_floor_escalates_to_retune():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    pm = uniform_power(plat, n_levels=2)
+    plat_p = plat.with_power(pm)
+    conf = run_shisha(
+        weights(layers), Trace(DatabaseEvaluator(plat_p, layers)), "H3"
+    ).result.best_conf
+    tuner = _throttle_tuner(plat_p, layers)
+    hot_ep = conf.eps[0]
+    pm.set_level(hot_ep, 1)  # already at the ladder floor
+    factors = [1.0] * 4
+    factors[hot_ep] = 1.6
+    hot = EPDerates(factors=tuple(factors))
+    cool = EPDerates(factors=(1.0,) * 4)
+    times = [1.0] * conf.depth
+    tuner.observe(1.0, conf, times, hot, frozenset())
+    tuner.observe(2.0, conf, times, cool, frozenset())
+    r = tuner.observe(4.0, conf, times, hot, frozenset())
+    # no headroom left: the throttle event falls through to a full re-tune
+    assert r is not None and r.kind == "throttle"
+    assert r.tune_result.n_explored > 1
+
+
+# ---------------------------------------------------------------------------
+# serving integration: energy, temperature tracks, bit-for-bit pins
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4)
+    ev = DatabaseEvaluator(plat, layers)
+    sh = run_shisha(weights(layers), Trace(ev), "H3")
+    return {
+        "layers": layers,
+        "plat": plat,
+        "ev": ev,
+        "conf": sh.result.best_conf,
+        "cap": sh.result.best_throughput,
+        "slo": 3.0 * sum(ev.stage_times(sh.result.best_conf)),
+    }
+
+
+def test_serve_reports_energy_and_peak_watts(tuned):
+    plat_p = tuned["plat"].with_power(uniform_power(tuned["plat"]))
+    ev = DatabaseEvaluator(plat_p, tuned["layers"])
+    traffic = PoissonTraffic(rate=0.6 * tuned["cap"], seed=5)
+    sim = ServingSimulator(ev, tuned["conf"], slo=tuned["slo"])
+    res = sim.run(traffic.arrivals(30.0), 30.0)
+    p = res.power
+    assert p is not None
+    assert p["energy_j"] > 0.0
+    assert p["joules_per_request"] == pytest.approx(p["energy_j"] / res.n_completed)
+    assert p["avg_package_w"] <= p["peak_package_w"]
+    # static leakage alone lower-bounds the window average
+    assert p["avg_package_w"] >= plat_p.power.static_package_w * 0.99
+    assert p["cap_w"] is None  # uncapped exports None, not inf
+    assert p["dvfs_levels"] == [0, 0, 0, 0]
+    assert p["throttle_events"] == 0 and p["max_temp_c"] is None
+
+
+def test_serve_energy_is_deterministic(tuned):
+    traffic = PoissonTraffic(rate=0.6 * tuned["cap"], seed=5)
+    runs = []
+    for _ in range(2):
+        plat_p = tuned["plat"].with_power(
+            uniform_power(tuned["plat"], thermal=uniform_thermal(4, seed=3))
+        )
+        ev = DatabaseEvaluator(plat_p, tuned["layers"])
+        sim = ServingSimulator(ev, tuned["conf"], slo=tuned["slo"])
+        runs.append(sim.run(traffic.arrivals(30.0), 30.0))
+    assert runs[0].power == runs[1].power
+    assert runs[0].latencies == runs[1].latencies
+
+
+def test_degenerate_power_serve_is_bit_for_bit(tuned):
+    traffic = PoissonTraffic(rate=0.6 * tuned["cap"], seed=5)
+    arr = traffic.arrivals(60.0)
+    bare = ServingSimulator(tuned["ev"], tuned["conf"], slo=tuned["slo"]).run(arr, 60.0)
+    plat_p = tuned["plat"].with_power(degenerate_power(tuned["plat"]))
+    powered = ServingSimulator(
+        DatabaseEvaluator(plat_p, tuned["layers"]), tuned["conf"], slo=tuned["slo"]
+    ).run(arr, 60.0)
+    assert bare.latencies == powered.latencies
+    assert bare.occupancy == powered.occupancy
+    assert bare.n_completed == powered.n_completed
+    # the power block is the only addition
+    assert bare.power is None and powered.power is not None
+
+
+def test_lower_dvfs_level_trades_speed_for_joules(tuned):
+    traffic = PoissonTraffic(rate=0.4 * tuned["cap"], seed=7)
+    arr = traffic.arrivals(40.0)
+    results = {}
+    for lvl in (0, 2):
+        pm = uniform_power(tuned["plat"])
+        for ep in range(4):
+            pm.set_level(ep, lvl)
+        ev = DatabaseEvaluator(tuned["plat"].with_power(pm), tuned["layers"])
+        results[lvl] = ServingSimulator(ev, tuned["conf"], slo=tuned["slo"]).run(
+            arr, 40.0
+        )
+    # downclocked: slower service, lower peak draw
+    assert results[2].p50 > results[0].p50
+    assert results[2].power["peak_package_w"] < results[0].power["peak_package_w"]
+
+
+def test_serve_thermal_throttle_triggers_dvfs_response(tuned):
+    # aggressive thermal constants: tau ~ 4 s with a narrow hysteresis band
+    # placed so a busy FEP's draw crosses t_hot while its *throttled* draw
+    # (electrical derate) settles below t_cool -- the latch oscillates
+    thermal = ThermalModel(
+        r_k_per_w=(4.0,) * 4,
+        c_j_per_k=(1.0,) * 4,
+        t_hot_c=80.0,
+        t_cool_c=76.0,
+    )
+    pm = uniform_power(tuned["plat"], thermal=thermal)
+    plat_p = tuned["plat"].with_power(pm)
+    ev = DatabaseEvaluator(plat_p, tuned["layers"])
+    tuner = ContinuousShisha(
+        platform=plat_p,
+        layers=tuple(tuned["layers"]),
+        make_evaluator=lambda p: DatabaseEvaluator(p, tuned["layers"]),
+        cooldown=1.0,
+        alpha=2,
+        measure_batches=2,
+    )
+    traffic = PoissonTraffic(rate=0.7 * tuned["cap"], seed=5)
+    sim = ServingSimulator(
+        ev,
+        tuned["conf"],
+        slo=tuned["slo"],
+        autotuner=tuner,
+        monitor_interval=0.5,
+    )
+    res = sim.run(traffic.arrivals(120.0), 120.0)
+    assert res.power["throttle_events"] > 0
+    assert res.power["max_temp_c"] >= thermal.t_hot_c
+    kinds = [r.kind for r in tuner.history]
+    assert "throttle" in kinds, kinds
+    # the throttle response stepped frequencies down, not the schedule
+    first = next(r for r in tuner.history if r.kind == "throttle")
+    assert first.dvfs_levels is not None and any(l > 0 for l in first.dvfs_levels)
+
+
+def test_temperature_counter_tracks_exported(tuned):
+    tl = Telemetry()
+    thermal = uniform_thermal(4, seed=1)
+    pm = uniform_power(tuned["plat"], thermal=thermal)
+    ev = DatabaseEvaluator(tuned["plat"].with_power(pm), tuned["layers"])
+    traffic = PoissonTraffic(rate=0.6 * tuned["cap"], seed=5)
+    sim = ServingSimulator(ev, tuned["conf"], slo=tuned["slo"], telemetry=tl)
+    sim.run(traffic.arrivals(10.0), 10.0)
+    rows = [json.loads(l) for l in tl.export_jsonl().splitlines()]
+    temp_rows = [r for r in rows if r["name"].startswith("thermal.temp_c:")]
+    assert temp_rows and all(r["ph"] == "C" for r in temp_rows)
+    assert all(r["args"]["value"] >= thermal.t_ambient_c for r in temp_rows)
+    watt_rows = [r for r in rows if r["name"] == "power.package_w" and r.get("ph") == "C"]
+    assert watt_rows
+    chrome = tl.export_chrome_trace()
+    assert any(e.get("ph") == "C" for e in chrome["traceEvents"])
+    snap = tl.metrics_snapshot()
+    assert "power.energy_j" in snap and "power.package_w" in snap
+
+
+# ---------------------------------------------------------------------------
+# co-serve: per-tenant energy and the degenerate pin
+# ---------------------------------------------------------------------------
+
+
+def _two_tenants(plat, horizon):
+    layers_a = network_layers("synthnet")
+    layers_b = network_layers("resnet50")
+    return [
+        Tenant(
+            name="synthnet",
+            layers=tuple(layers_a),
+            traffic=ReplayTraffic.record(PoissonTraffic(rate=2.0, seed=11), horizon),
+            slo=2.7,
+        ),
+        Tenant(
+            name="resnet50",
+            layers=tuple(layers_b),
+            traffic=ReplayTraffic.record(PoissonTraffic(rate=1.0, seed=12), horizon),
+            slo=2.0,
+        ),
+    ]
+
+
+def test_co_serve_degenerate_power_is_bit_for_bit():
+    plat = paper_platform(4)
+    horizon = 20.0
+    tenants = _two_tenants(plat, horizon)
+    bare = co_serve(plat, tenants, horizon=horizon, elastic=False)
+    powered = co_serve(
+        plat.with_power(degenerate_power(plat)),
+        tenants,
+        horizon=horizon,
+        elastic=False,
+    )
+    for rb, rp in zip(bare.results, powered.results):
+        assert rb.sim.latencies == rp.sim.latencies
+        assert rb.sim.n_completed == rp.sim.n_completed
+        assert rb.sim.power is None and rp.sim.power is not None
+    assert bare.aggregate_energy_j is None
+    assert powered.aggregate_energy_j is not None and powered.aggregate_energy_j > 0
+    done = sum(r.sim.n_completed for r in powered.results)
+    assert powered.joules_per_request == pytest.approx(
+        powered.aggregate_energy_j / done
+    )
