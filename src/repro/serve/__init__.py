@@ -44,6 +44,7 @@ from .multitenant import (
 )
 from .simulator import (
     EventLoop,
+    HeapEventLoop,
     Replatform,
     Request,
     ServingSimulator,
@@ -69,6 +70,7 @@ __all__ = [
     "DriftDetector",
     "ElasticPartitioner",
     "EventLoop",
+    "HeapEventLoop",
     "MMPPTraffic",
     "PARTITION_STRATEGIES",
     "PoissonTraffic",

@@ -414,6 +414,7 @@ class SharedClockCoSimulator:
         dvfs: bool = False,
         telemetry=None,
         max_bundle: int = 1,
+        loop: EventLoop | None = None,
     ):
         if make_evaluator is None:
             make_evaluator = lambda p, layers: DatabaseEvaluator(p, layers)
@@ -448,7 +449,10 @@ class SharedClockCoSimulator:
         #: repartition (package deal); 1 = classic single steal
         self.max_bundle = max(1, max_bundle)
 
-        self.loop = EventLoop(self.telemetry)
+        #: the shared event engine; injectable so the old-vs-new
+        #: equivalence suite can drive a whole co-simulation on the legacy
+        #: :class:`~repro.serve.simulator.HeapEventLoop` reference engine
+        self.loop = loop if loop is not None else EventLoop(self.telemetry)
         parts = partition_eps(
             platform, len(tenants), strategy, shares=[t.share for t in tenants]
         )
@@ -1021,6 +1025,7 @@ def co_serve(
     faults: Sequence[tuple] | None = None,
     telemetry=None,
     max_bundle: int = 1,
+    loop: EventLoop | None = None,
 ) -> CoServeResult:
     """Partition, tune and co-serve all tenants on one shared clock.
 
@@ -1050,6 +1055,7 @@ def co_serve(
         dvfs=dvfs,
         telemetry=telemetry,
         max_bundle=max_bundle,
+        loop=loop,
     )
     for fault in faults or ():
         if fault[0] == "slowdown":

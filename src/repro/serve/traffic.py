@@ -45,12 +45,31 @@ def _rng(seed: int) -> np.random.Generator:
     return np.random.Generator(np.random.PCG64(seed))
 
 
+# Arrivals are drawn in chunks of this many exponential gaps at a time; the
+# value only trades numpy call overhead against overshoot past the horizon,
+# it does not affect the emitted timestamps.
+_CHUNK = 4096
+
+
 # ---------------------------------------------------------------------------
 
 
 @dataclasses.dataclass(frozen=True)
 class PoissonTraffic:
-    """Homogeneous Poisson arrivals at ``rate`` requests/second."""
+    """Homogeneous Poisson arrivals at ``rate`` requests/second.
+
+    Gaps are drawn ``_CHUNK`` at a time and accumulated with a *carry-in*
+    cumsum: the running timestamp is written into slot 0 of the work buffer
+    so ``np.cumsum`` performs exactly the same left-to-right additions as
+    the scalar ``t += gap`` loop it replaced.  (The naive
+    ``t + np.cumsum(gaps)`` form is NOT bit-exact — it reassociates the
+    carry addition and drifts by 1 ulp at chunk boundaries.)  A PCG64
+    ``Generator`` consumes the identical stream for ``exponential(s)``
+    scalar draws and one ``exponential(s, size=n)`` array draw, so the
+    emitted timestamps are bit-for-bit those of the sequential loop;
+    ``tests/test_event_engine.py`` pins this against an inline scalar
+    reference.
+    """
 
     rate: float
     seed: int = 0
@@ -59,13 +78,19 @@ class PoissonTraffic:
         if self.rate <= 0:
             return []
         rng = _rng(self.seed)
+        scale = 1.0 / self.rate
         out: list[float] = []
+        buf = np.empty(_CHUNK + 1)
         t = 0.0
         while True:
-            t += rng.exponential(1.0 / self.rate)
-            if t >= horizon:
+            buf[0] = t
+            buf[1:] = rng.exponential(scale, size=_CHUNK)
+            ts = np.cumsum(buf)[1:]
+            cut = int(np.searchsorted(ts, horizon, side="left"))
+            out.extend(ts[:cut].tolist())
+            if cut < _CHUNK:
                 return out
-            out.append(t)
+            t = ts[-1]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +109,10 @@ class MMPPTraffic:
     seed: int = 0
 
     def arrivals(self, horizon: float) -> list[float]:
+        # Stays sequential: each draw's distribution depends on the current
+        # state, and state flips are decided by comparing against the drawn
+        # gap — the stream cannot be pre-drawn in chunks without changing
+        # which variates land where.
         rng = _rng(self.seed)
         out: list[float] = []
         t = 0.0
@@ -123,6 +152,9 @@ class DiurnalTraffic:
         return self.base_rate + (self.peak_rate - self.base_rate) * swing
 
     def arrivals(self, horizon: float) -> list[float]:
+        # Stays sequential: thinning interleaves exponential and uniform
+        # draws per candidate, so chunked array draws would consume the
+        # PCG64 stream in a different order and change the trace.
         lam_max = max(self.peak_rate, self.base_rate)
         if lam_max <= 0:
             return []
