@@ -1,0 +1,248 @@
+"""Chaos sweep — blind vs resilient serving under a seeded fault trace.
+
+    PYTHONPATH=src python -m benchmarks.chaos_sweep [--quick]
+
+The acceptance scenario of the chaos layer.  A tuned synthnet pipeline on
+the 2x4-mesh cell serves the *same* seeded Poisson stream while the
+*identical* seeded fault trace — FEP dropouts/revivals from per-class
+MTBF/MTTR, fabric link failures and degradations, transient batch
+errors — plays out, once per arm:
+
+  * **blind** — the plain :class:`ServingSimulator`: dead EPs stall their
+    stage until the scripted revival, batch errors re-serve head-of-line
+    forever, queues are unbounded, and every completion counts no matter
+    how late.  At 0.8x capacity the fault downtime pushes effective
+    utilisation past 1: the backlog grows with every outage and almost
+    nothing finishes inside its deadline (congestion collapse).
+  * **resilient** — the same simulator with a :class:`ResiliencePolicy`:
+    per-request deadlines, capped exponential-backoff retries, a bounded
+    admission queue, and deadline-aware shedding that drops expired work
+    at whatever stage the outage stranded it.  Goodput stays near the
+    faulted pipeline's effective capacity because service time is never
+    spent on requests that already missed their deadline.
+  * **retuning** — resilient plus a :class:`ContinuousShisha` autotuner
+    (dropout/link-loss rescues).  Reported, not asserted: at these MTBFs
+    the exploration windows — charged in simulated service seconds — cost
+    more than the rescued placement earns back, an honest negative result
+    the payload keeps visible.  (The rescue path itself is pinned by
+    ``tests/test_chaos.py``.)
+
+Goodput is scored at the same deadline for every arm (the blind arm's is
+derived post-hoc from its latency sample), so the comparison is honest:
+the resilient arm must win on in-deadline completions per second AND
+keep its peak in-system population below the blind arm's backlog.  Both
+claims are asserted per swept chaos seed.
+
+The full payload lands in ``experiments/benchmarks/chaos_sweep.json`` and
+the first seed's headline additionally in ``BENCH_chaos.json`` at the
+repo root, mirroring ``BENCH_power_sweep.json``; both are strict JSON.
+Everything here is deterministic: database oracle, seeded traffic,
+seeded fault trace (a pure function of model, platform shape, horizon).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.core import DatabaseEvaluator, Trace, generate_seed, paper_platform, tune, weights
+from repro.faults import FaultInjector, FaultModel, ResiliencePolicy
+from repro.interconnect import mesh2d, uniform_fabric
+from repro.models.cnn import network_layers
+from repro.serve import ContinuousShisha, PoissonTraffic, ServingSimulator
+
+from .common import save
+
+ROOT = Path(__file__).resolve().parent.parent
+
+#: the same healthy 2x4 mesh cell the serve benchmarks use
+LINK_BW = 1e9
+CHAOS_SEEDS = (7, 19, 42)
+CHAOS_SEEDS_QUICK = (7,)
+
+#: offered load as a fraction of tuned capacity — high enough that fault
+#: downtime pushes the *effective* utilisation past 1, so the blind arm's
+#: backlog cannot drain between outages
+LOAD_FRACTION = 0.8
+
+#: admission bound for the resilient arms; the blind arm queues unboundedly
+QUEUE_CAP = 64
+
+
+def _platform():
+    """A fresh platform per arm: chaos link faults mutate the shared
+    fabric link state, so arms must not share a fabric object."""
+    return paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=LINK_BW, latency=1e-6))
+    )
+
+
+def _chaos(seed: int) -> FaultModel:
+    """Class-1 (FEP) outages only — the class-2 EPs stay up, so the fault
+    downtime derates rather than zeroes the cell's capacity."""
+    return FaultModel(
+        seed=seed,
+        ep_mtbf={1: 12.0},
+        ep_mttr={1: 3.0},
+        link_mtbf=20.0,
+        link_mttr=3.0,
+        batch_error_p=0.05,
+    )
+
+
+def _arm(res, deadline: float, horizon: float) -> dict:
+    """Honest cross-arm scoring: goodput at the shared deadline (the blind
+    arm has no policy, so its goodput is derived from its latencies)."""
+    n_good = sum(1 for l in res.latencies if l <= deadline)
+    return {
+        "n_arrived": res.n_arrived,
+        "n_completed": res.n_completed,
+        "goodput_rps": n_good / horizon,
+        "throughput_rps": res.throughput_rps,
+        "availability": res.availability,
+        "n_shed": res.n_shed,
+        "n_failed": res.n_failed,
+        "n_retries": res.n_retries,
+        "p99_latency_s": res.p99,
+        "peak_in_system": max((n for _, n in res.load_samples), default=0),
+        "n_reconfigs": len(res.reconfigs),
+        "reconfig_kinds": sorted({r["kind"] for r in res.reconfigs}),
+    }
+
+
+def sweep_cell(seed, layers, conf, arrivals, horizon, slo, deadline, verbose) -> dict:
+    fm = _chaos(seed)
+    trace = FaultInjector(fm).trace(_platform(), horizon)
+    kinds = [ev.kind for ev in trace]
+    assert "dropout" in kinds, f"seed {seed}: fault trace has no EP dropout"
+    assert "link" in kinds, f"seed {seed}: fault trace has no link fault"
+
+    pol = ResiliencePolicy(
+        deadline_s=deadline, max_retries=3, backoff_s=0.05, queue_cap=QUEUE_CAP
+    )
+
+    def serve(resilience=None, autotuner=None):
+        plat = _platform().with_faults(fm)
+        sim = ServingSimulator(
+            DatabaseEvaluator(plat, layers),
+            conf,
+            slo=slo,
+            resilience=resilience,
+            autotuner=autotuner(plat) if autotuner is not None else None,
+        )
+        return _arm(sim.run(arrivals, horizon), deadline, horizon)
+
+    blind = serve()
+    resilient = serve(resilience=pol)
+    retuning = serve(
+        resilience=pol,
+        autotuner=lambda p: ContinuousShisha(
+            p,
+            layers,
+            make_evaluator=lambda q: DatabaseEvaluator(q, layers),
+            measure_batches=1,
+            alpha=2,
+            cooldown=15.0,
+        ),
+    )
+
+    cell = {
+        "chaos_seed": seed,
+        "n_fault_events": len(trace),
+        "n_dropouts": kinds.count("dropout"),
+        "n_link_events": kinds.count("link"),
+        "blind": blind,
+        "resilient": resilient,
+        "retuning": retuning,
+    }
+    cell["resilient_wins_goodput"] = resilient["goodput_rps"] > blind["goodput_rps"]
+    cell["resilient_queue_bounded"] = (
+        resilient["peak_in_system"] < blind["peak_in_system"]
+    )
+    if verbose:
+        print(
+            f"  chaos_sweep seed={seed} ({len(trace)} fault events): "
+            f"blind goodput={blind['goodput_rps']:.2f} rps "
+            f"(peak in-system {blind['peak_in_system']}), "
+            f"resilient goodput={resilient['goodput_rps']:.2f} rps "
+            f"(peak {resilient['peak_in_system']}, shed {resilient['n_shed']}), "
+            f"retuning goodput={retuning['goodput_rps']:.2f} rps "
+            f"({retuning['n_reconfigs']} retunes) -> "
+            f"wins: {cell['resilient_wins_goodput']}, "
+            f"bounded: {cell['resilient_queue_bounded']}"
+        )
+    return cell
+
+
+def run(verbose: bool = True, quick: bool = False) -> dict:
+    horizon = 30.0 if quick else 60.0
+    seeds = CHAOS_SEEDS_QUICK if quick else CHAOS_SEEDS
+
+    layers = network_layers("synthnet")
+    healthy = _platform()
+    ev = DatabaseEvaluator(healthy, layers)
+    tuned = tune(generate_seed(weights(layers), healthy), Trace(ev))
+    conf = tuned.best_conf
+    rate = LOAD_FRACTION * tuned.best_throughput
+    arrivals = PoissonTraffic(rate=rate, seed=29).arrivals(horizon)
+    slo = 3.0 * sum(ev.stage_times(conf))
+    deadline = 2.0 * slo
+
+    cells = [
+        sweep_cell(s, layers, conf, arrivals, horizon, slo, deadline, verbose)
+        for s in seeds
+    ]
+
+    # acceptance at every swept seed: under the identical fault trace the
+    # resilient arm delivers strictly more in-deadline completions per
+    # second AND keeps its in-system population below the blind backlog
+    for cell in cells:
+        assert cell["resilient_wins_goodput"], (
+            f"seed {cell['chaos_seed']}: resilient goodput "
+            f"{cell['resilient']['goodput_rps']:.2f} rps did not beat blind "
+            f"{cell['blind']['goodput_rps']:.2f} rps"
+        )
+        assert cell["resilient_queue_bounded"], (
+            f"seed {cell['chaos_seed']}: resilient peak in-system "
+            f"{cell['resilient']['peak_in_system']} not below blind "
+            f"{cell['blind']['peak_in_system']}"
+        )
+
+    head = cells[0]
+    payload = {
+        "bench": "chaos_sweep",
+        "cell": {"net": "synthnet", "topology": "mesh2x4", "queue_cap": QUEUE_CAP},
+        "horizon_s": horizon,
+        "offered_rate": rate,
+        "deadline_s": deadline,
+        "sweep": cells,
+        # headline scalars (first swept seed) for the BENCH_ artifact
+        "chaos_seed": head["chaos_seed"],
+        "n_fault_events": head["n_fault_events"],
+        "blind_goodput_rps": head["blind"]["goodput_rps"],
+        "resilient_goodput_rps": head["resilient"]["goodput_rps"],
+        "retuning_goodput_rps": head["retuning"]["goodput_rps"],
+        "blind_peak_in_system": head["blind"]["peak_in_system"],
+        "resilient_peak_in_system": head["resilient"]["peak_in_system"],
+        "resilient_availability": head["resilient"]["availability"],
+        "resilient_wins_goodput": head["resilient_wins_goodput"],
+        "resilient_queue_bounded": head["resilient_queue_bounded"],
+    }
+    save("chaos_sweep", payload)
+    out = ROOT / "BENCH_chaos.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    if verbose:
+        print(f"  chaos_sweep payload -> {out.name}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true", help="single chaos seed, shorter serve")
+    args = ap.parse_args()
+    run(verbose=True, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

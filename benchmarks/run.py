@@ -43,8 +43,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from . import fig4_convergence, fig5_quality, fig6_seed, fig7_heuristics, fig9_latency
-    from . import fig9_interconnect, kernels_bench, power_sweep, roofline, selfbench
-    from . import serve_sim
+    from . import chaos_sweep, fig9_interconnect, kernels_bench, power_sweep, roofline
+    from . import selfbench, serve_sim
 
     figures = {
         "fig4": fig4_convergence.run,
@@ -60,6 +60,7 @@ def main() -> None:
         "multitenant_drift": lambda: serve_sim.run_multitenant_drift(quick=args.quick),
         "selfbench": lambda: selfbench.run(quick=args.quick),
         "power_sweep": lambda: power_sweep.run(quick=args.quick),
+        "chaos_sweep": lambda: chaos_sweep.run(quick=args.quick),
     }
     if args.only:
         keep = set(args.only.split(","))

@@ -45,15 +45,18 @@ class LayerContract:
 
 
 CONTRACTS: dict[str, LayerContract] = {
-    "core": LayerContract(eager=frozenset(), lazy=frozenset({"interconnect", "power"})),
+    "core": LayerContract(
+        eager=frozenset(), lazy=frozenset({"interconnect", "power", "faults"})
+    ),
     "interconnect": LayerContract(eager=frozenset(), lazy=frozenset()),
     "power": LayerContract(eager=frozenset(), lazy=frozenset()),
     "telemetry": LayerContract(eager=frozenset(), lazy=frozenset()),
     "analysis": LayerContract(eager=frozenset(), lazy=frozenset()),
+    "faults": LayerContract(eager=frozenset(), lazy=frozenset()),
 }
 
 #: packages that must import nothing outside the standard library
-STDLIB_ONLY = frozenset({"analysis", "power"})
+STDLIB_ONLY = frozenset({"analysis", "power", "faults"})
 
 
 def _is_type_checking_test(test: ast.expr) -> bool:

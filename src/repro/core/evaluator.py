@@ -35,6 +35,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import math
 from typing import Protocol, Sequence
 
 from .config import PipelineConfig
@@ -255,7 +256,13 @@ class Trace:
         fill = self.evaluator.pipeline_latency(conf)
         if reconfig_cost is None:
             reconfig_cost = self.reconfig_overhead
-        charged = reconfig_cost + fill + self.measure_batches * beat
+        if math.isfinite(beat):
+            charged = reconfig_cost + fill + self.measure_batches * beat
+        else:
+            # a severed stage boundary (link fault) makes the pipeline
+            # unable to flow: the runtime reconfigures, sees nothing come
+            # out, and abandons the trial — only the reconfiguration is paid
+            charged = reconfig_cost
         self._wall += charged
         tl = self.telemetry
         if tl is not None and tl.enabled:

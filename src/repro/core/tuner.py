@@ -36,6 +36,7 @@ trial.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Literal
 
 from .config import PipelineConfig
@@ -128,12 +129,16 @@ def placement_reconfig_cost(
     flat = trace.reconfig_overhead
     if fabric is None:
         return flat
+    if not math.isfinite(fabric.latency_ep(conf.eps[stage], new_ep)):
+        # link faults severed the shipping route: the relocation cannot be
+        # performed at all (the caller must skip the candidate)
+        return math.inf
     route = fabric.route_ep(conf.eps[stage], new_ep)
     if len(route) <= 1:
         return flat
     a, b = conf.boundaries()[stage]
     wbytes = sum(trace.evaluator.layers[i].weight_bytes for i in range(a, b))
-    links = fabric.topology.links
+    links = fabric.effective_topology().links
     extra = sum(wbytes / links[k].bw + links[k].latency for k in route[1:])
     return flat + extra
 
@@ -295,15 +300,13 @@ def tune(
             if new_ep is not None:
                 # relocation ships the stage's weights across the fabric:
                 # the trial is charged its routed weight-shipping cost, not
-                # the flat boundary-move overhead
-                candidates.append(
-                    (
-                        _relocate(conf, slowest, new_ep),
-                        placement_reconfig_cost(trace, conf, slowest, new_ep),
-                        None,
-                        "relocation",
+                # the flat boundary-move overhead.  An infinite cost means
+                # link faults severed the shipping route — unperformable
+                rc = placement_reconfig_cost(trace, conf, slowest, new_ep)
+                if math.isfinite(rc):
+                    candidates.append(
+                        (_relocate(conf, slowest, new_ep), rc, None, "relocation")
                     )
-                )
         if pm is not None:
             # reject cap-infeasible boundary/placement candidates before
             # they are paid (a move onto a hungrier EP set may break the
@@ -334,9 +337,10 @@ def tune(
             pm.set_level(change[0], change[1])
         if tl is not None:
             tl.counter(f"tune.moves.{candidates[chosen][3]}").inc()
-            tl.histogram("tune.beat_delta_s").observe(
-                1.0 / tp - stage_times[slowest]
-            )
+            if tp > 0.0:  # a severed pipeline has no beat to compare
+                tl.histogram("tune.beat_delta_s").observe(
+                    1.0 / tp - stage_times[slowest]
+                )
         if tp <= throughput:
             gamma += 1
         else:

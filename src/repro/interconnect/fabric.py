@@ -109,6 +109,13 @@ class Fabric:
     #: static-vs-adaptive delta.  ``None`` (the default) records nothing
     #: and prices bit-for-bit as before.
     telemetry: "object | None" = dataclasses.field(default=None, repr=False)
+    #: live link-fault state: LinkKey -> bandwidth factor (0.0 = link dead,
+    #: 0 < f < 1 = degraded).  Healthy links are absent.  The dict is shared
+    #: *by reference* across :meth:`restrict` copies, so a fault applied to
+    #: the global fabric is instantly visible to every tenant's restricted
+    #: view — exactly how a physical link failure behaves.  Empty (the
+    #: default) prices bit-for-bit as before faults existed.
+    link_state: dict = dataclasses.field(default_factory=dict, repr=False)
 
     def __post_init__(self):
         self.ep_nodes = tuple(self.ep_nodes)
@@ -121,6 +128,8 @@ class Fabric:
             raise ValueError(f"mc_bw must be a number, mapping, 'auto' or None, got {self.mc_bw!r}")
         if self.k_paths < 1 or self.max_sweeps < 1:
             raise ValueError("need k_paths >= 1 and max_sweeps >= 1")
+        #: (fault fingerprint, derived topology) — rebuilt when state changes
+        self._eff_cache: tuple[tuple, Topology] = ((), self.topology)
 
     @property
     def n_eps(self) -> int:
@@ -158,13 +167,94 @@ class Fabric:
             seed=self.seed if seed is None else seed,
         )
 
+    # -- link faults ----------------------------------------------------------
+
+    def set_link_state(self, u: int, v: int, factor: float) -> None:
+        """Set link ``(u, v)``'s bandwidth factor; ``>= 1`` restores it."""
+        key = (u, v) if u < v else (v, u)
+        if key not in self.topology.links:
+            raise KeyError(f"no such link {key} in topology {self.topology.name!r}")
+        if factor < 0.0:
+            raise ValueError(f"link factor must be >= 0, got {factor}")
+        if factor >= 1.0:
+            self.link_state.pop(key, None)
+        else:
+            self.link_state[key] = factor
+
+    def fail_link(self, u: int, v: int) -> None:
+        self.set_link_state(u, v, 0.0)
+
+    def degrade_link(self, u: int, v: int, factor: float) -> None:
+        if not (0.0 < factor < 1.0):
+            raise ValueError(f"degrade factor must be in (0, 1), got {factor}")
+        self.set_link_state(u, v, factor)
+
+    def restore_link(self, u: int, v: int) -> None:
+        self.set_link_state(u, v, 1.0)
+
+    def fault_fingerprint(self) -> tuple:
+        """Canonical view of the current link faults (``()`` when healthy).
+
+        A pure function of the fault *state*, independent of the order the
+        faults were applied in — the token drift fingerprints fold in so a
+        link change is visible even when EP factors and the dead set are
+        untouched.
+        """
+        return tuple(sorted(self.link_state.items()))
+
+    def _topo(self) -> Topology:
+        """The effective topology under the current link faults.
+
+        Identity (``self.topology``, caches and all) while the fault state
+        is empty — the degenerate contract.  Faulted states derive a fresh
+        topology (dead links removed, degraded links' bandwidth scaled) and
+        cache it against the fingerprint, so repeated pricing between fault
+        transitions pays the rebuild once.
+        """
+        if not self.link_state:
+            return self.topology
+        fp = self.fault_fingerprint()
+        cached_fp, cached = self._eff_cache
+        if fp != cached_fp:
+            cached = self.topology.with_degraded_links(self.link_state)
+            self._eff_cache = (fp, cached)
+        return cached
+
+    def effective_topology(self) -> Topology:
+        """Public view of :meth:`_topo` for pricing callers outside the package."""
+        return self._topo()
+
+    def marooned_eps(self) -> tuple[int, ...]:
+        """EPs cut off from the main component by dead links.
+
+        The *main* component is the one hosting the most EPs (ties: the one
+        containing the smallest node id).  EPs bound to any other component
+        cannot exchange activations with the majority of the platform, so
+        placement rescues treat them like dead EPs until the link heals.
+        """
+        topo = self._topo()
+        comps = topo.components()
+        if len(comps) <= 1:
+            return ()
+        count = {c: sum(1 for n in self.ep_nodes if n in set(c)) for c in comps}
+        main = max(comps, key=lambda c: (count[c], -c[0]))
+        main_set = set(main)
+        return tuple(
+            ep for ep, n in enumerate(self.ep_nodes) if n not in main_set
+        )
+
     # -- routing shortcuts ----------------------------------------------------
 
     def route_ep(self, src_ep: int, dst_ep: int) -> tuple[LinkKey, ...]:
-        return self.topology.route(self.ep_nodes[src_ep], self.ep_nodes[dst_ep])
+        return self._topo().route(self.ep_nodes[src_ep], self.ep_nodes[dst_ep])
 
     def latency_ep(self, src_ep: int, dst_ep: int) -> float:
-        return self.topology.path_latency(self.ep_nodes[src_ep], self.ep_nodes[dst_ep])
+        """Routed latency between two EPs; ``inf`` when faults severed them."""
+        topo = self._topo()
+        src, dst = self.ep_nodes[src_ep], self.ep_nodes[dst_ep]
+        if self.link_state and not topo.connected(src, dst):
+            return float("inf")
+        return topo.path_latency(src, dst)
 
     # -- contention pricing ---------------------------------------------------
 
@@ -198,6 +288,8 @@ class Fabric:
         link_load: dict[LinkKey, int] = {}
         node_load: dict[int, int] = {}
         for (s, d), r in zip(pairs, routes):
+            if r is None:
+                continue  # severed flow: consumes no link or MC capacity
             for k in r:
                 link_load[k] = link_load.get(k, 0) + 1
             if r and self._mc_enabled:
@@ -209,22 +301,32 @@ class Fabric:
         self,
         flows: Sequence[Flow],
         pairs: Sequence[tuple[int, int]],
-        routes: Sequence[tuple[LinkKey, ...]],
+        routes: Sequence["tuple[LinkKey, ...] | None"],
     ) -> list[float]:
-        """Fair-share + hotspot pricing of flows on an explicit route set."""
+        """Fair-share + hotspot pricing of flows on an explicit route set.
+
+        A ``None`` route means link faults severed the flow's endpoints:
+        the transfer can never complete, so it prices ``inf`` (the serving
+        layer surfaces that as a ``"link-loss"`` drift rather than an
+        exception mid-simulation).
+        """
+        links = self._topo().links
         link_load, node_load = self._loads(pairs, routes)
         times = []
         for f, (s, d), r in zip(flows, pairs, routes):
+            if r is None:
+                times.append(float("inf"))
+                continue
             if not r:
                 times.append(0.0)
                 continue
-            eff = min(self.topology.links[k].bw / link_load[k] for k in r)
+            eff = min(links[k].bw / link_load[k] for k in r)
             if self._mc_enabled:
                 for node in (s, d):
                     cap = self._mc_cap(node)
                     if cap is not None:
                         eff = min(eff, cap / node_load[node])
-            times.append(f.nbytes / eff + sum(self.topology.links[k].latency for k in r))
+            times.append(f.nbytes / eff + sum(links[k].latency for k in r))
         return times
 
     def flow_times(self, flows: Sequence[Flow]) -> list[float]:
@@ -252,7 +354,7 @@ class Fabric:
         if link_load:
             link_bytes: dict[LinkKey, float] = {}
             for f, r in zip(flows, routes):
-                for k in r:
+                for k in r or ():
                     link_bytes[k] = link_bytes.get(k, 0.0) + f.nbytes
             for k in sorted(link_load):
                 tl.histogram("fabric.link_flows").observe(link_load[k])
@@ -296,7 +398,15 @@ class Fabric:
         multiset, seed), never worse than static in total priced cost.
         """
         pairs = [self._endpoints(f) for f in flows]
-        static = [self.topology.route(s, d) if s != d else () for (s, d) in pairs]
+        topo = self._topo()
+        static: list[tuple[LinkKey, ...] | None] = []
+        for (s, d) in pairs:
+            if s == d:
+                static.append(())
+            elif self.link_state and not topo.connected(s, d):
+                static.append(None)  # severed by link faults: prices inf
+            else:
+                static.append(topo.route(s, d))
         if self.routing != "adaptive":
             return static
         return self._adaptive_routes(flows, pairs, static)
@@ -340,14 +450,17 @@ class Fabric:
         """
         from .topology import path_links
 
+        topo = self._topo()
         cands: list[list[tuple[LinkKey, ...]]] = []
         for (s, d), st_route in zip(pairs, static):
-            if s == d:
-                cands.append([()])
+            if s == d or st_route is None:
+                # co-located (route ()) or severed (route None): nothing for
+                # best response to choose among
+                cands.append([st_route])
                 continue
             seen = {st_route}
             cl = [st_route]
-            for path in self.topology.k_shortest_paths(s, d, self.k_paths):
+            for path in topo.k_shortest_paths(s, d, self.k_paths):
                 r = path_links(path)
                 if r not in seen:
                     seen.add(r)
@@ -358,13 +471,15 @@ class Fabric:
         link_load: dict[LinkKey, int] = {}
         node_load: dict[int, int] = {}
         for (s, d), r in zip(pairs, assign):
+            if r is None:
+                continue
             for k in r:
                 link_load[k] = link_load.get(k, 0) + 1
             if r and self._mc_enabled:
                 node_load[s] = node_load.get(s, 0) + 1
                 node_load[d] = node_load.get(d, 0) + 1
 
-        links = self.topology.links
+        links = topo.links
         order = sorted(
             range(len(flows)), key=lambda i: (pairs[i], flows[i].nbytes, i)
         )

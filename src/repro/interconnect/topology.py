@@ -272,6 +272,82 @@ class Topology:
             coords=self.coords,
         )
 
+    def without_link(self, *keys: LinkKey) -> "Topology":
+        """Copy with the given links removed — a hard link failure.
+
+        The derived instance rebuilds its adjacency and route/k-path caches
+        from scratch, so dead links vanish from :meth:`route` *and* from
+        every :meth:`k_shortest_paths` candidate list.  Removal may
+        disconnect the graph: routes between severed components then raise,
+        and :meth:`connected` / :meth:`components` let callers detect the
+        partition instead of tripping over it.
+        """
+        dead = {_key(*k) for k in keys}
+        missing = sorted(dead - set(self.links))
+        if missing:
+            raise KeyError(f"no such links {missing} in topology {self.name!r}")
+        return Topology(
+            name=f"{self.name}-{len(dead)}link",
+            n_nodes=self.n_nodes,
+            links={k: l for k, l in self.links.items() if k not in dead},
+            coords=self.coords,
+        )
+
+    def with_degraded_links(self, factors: Mapping[LinkKey, float]) -> "Topology":
+        """Copy with per-link bandwidth multipliers; factor 0 removes a link.
+
+        The chaos layer's combined view of a faulted fabric: hard-failed
+        links (factor 0) disappear from routing entirely, degraded links
+        (0 < factor < 1) keep routing but price at the reduced bandwidth.
+        """
+        state = {_key(*k): f for k, f in factors.items()}
+        missing = sorted(set(state) - set(self.links))
+        if missing:
+            raise KeyError(f"no such links {missing} in topology {self.name!r}")
+        for k in sorted(state):
+            if not (0.0 <= state[k] <= 1.0):
+                raise ValueError(f"link factor must be in [0, 1], got {state[k]} for {k}")
+        links: dict[LinkKey, Link] = {}
+        for k, l in self.links.items():
+            f = state.get(k, 1.0)
+            if f <= 0.0:
+                continue
+            links[k] = l if f >= 1.0 else dataclasses.replace(l, bw=l.bw * f)
+        return Topology(
+            name=f"{self.name}!faults{len(state)}",
+            n_nodes=self.n_nodes,
+            links=links,
+            coords=self.coords,
+        )
+
+    # -- connectivity ---------------------------------------------------------
+
+    def components(self) -> tuple[tuple[int, ...], ...]:
+        """Connected components as sorted node tuples, ordered by least node."""
+        seen: set[int] = set()
+        comps: list[tuple[int, ...]] = []
+        for start in range(self.n_nodes):
+            if start in seen:
+                continue
+            comp = [start]
+            seen.add(start)
+            frontier = [start]
+            while frontier:
+                node = frontier.pop()
+                for nxt in self._adj[node]:
+                    if nxt not in seen:
+                        seen.add(nxt)
+                        comp.append(nxt)
+                        frontier.append(nxt)
+            comps.append(tuple(sorted(comp)))
+        return tuple(comps)
+
+    def connected(self, src: int, dst: int) -> bool:
+        """Is there any path ``src`` -> ``dst``?  (Cheap; no route built.)"""
+        if src == dst:
+            return True
+        return self._constrained_path(src, dst, frozenset(), frozenset()) is not None
+
 
 # ---------------------------------------------------------------------------
 # presets

@@ -16,6 +16,14 @@ classifies drift into the closed :data:`DRIFT_KINDS` set:
                      sick host.  The detector learns this from its bounded
                      per-EP derate history, so the first engagement is
                      conservatively classified as a slowdown;
+  * ``link-loss``  — a stage-boundary transfer can no longer complete: an
+                     observed stage time is *infinite* while its EP is alive,
+                     the signature of fabric link faults severing the route
+                     (the chaos layer's :mod:`repro.faults` injects these).
+                     Answered with a placement rescue: EPs marooned by the
+                     partition are buried like dead ones and Algorithm 2
+                     runs with relocation moves forced on, so the stranded
+                     stage is re-hosted inside the surviving component;
   * ``imbalance``  — the bottleneck shifted: max/median observed stage time
                      exceeds a threshold even without an attributable derate.
 
@@ -101,7 +109,9 @@ def drifted_platform(platform: Platform, drift: EPDerates, dead: FrozenSet[int] 
 #: the closed set of drift classifications.  Validated in
 #: :meth:`Drift.__post_init__`, so growing the taxonomy (as ``"throttle"``
 #: did) is a checked change here rather than a stringly-typed drive-by.
-DRIFT_KINDS = frozenset({"dropout", "slowdown", "throttle", "imbalance", "recovery"})
+DRIFT_KINDS = frozenset(
+    {"dropout", "slowdown", "throttle", "imbalance", "recovery", "link-loss"}
+)
 
 
 @dataclasses.dataclass
@@ -180,6 +190,20 @@ class DriftDetector:
         dead_in_use = [ep for ep in conf.eps if ep in dead]
         if dead_in_use:
             return Drift("dropout", f"dead EPs in use: {dead_in_use}", eps=tuple(dead_in_use))
+        # an infinite observed stage time on a *live* EP means the stage's
+        # boundary transfer can never complete: a fabric link fault severed
+        # the route (dead EPs were caught above, so this is unambiguous)
+        severed = [
+            s
+            for s, obs in enumerate(observed_times)
+            if math.isinf(obs) and conf.eps[s] not in dead
+        ]
+        if severed:
+            return Drift(
+                "link-loss",
+                f"stage boundaries severed by link faults at stages {severed}",
+                eps=tuple(conf.eps[s] for s in severed),
+            )
         # a factors tuple may be shorter than the platform (e.g. a stale
         # monitor snapshot after an elastic re-partition grew the EP set);
         # missing entries mean "no derate observed", exactly like
@@ -347,12 +371,26 @@ class ContinuousShisha:
         self._last_t = -math.inf
         # start from the no-drift state so the intrinsic imbalance of a
         # freshly tuned heterogeneous pipeline never triggers a re-tune
-        self._handled: tuple = ((1.0,) * self.platform.n_eps, frozenset())
+        self._handled: tuple = (
+            (1.0,) * self.platform.n_eps,
+            frozenset(),
+            self._fabric_key(),
+        )
         self._model_ev = self.make_evaluator(self.platform)
         self.history: list[Retune] = []
         #: kind of the last response issued; a throttle's subsequent easing
         #: is the step-down working, not hardware worth re-seeding for
         self._last_kind: str | None = None
+
+    def _fabric_key(self) -> tuple:
+        """Canonical link-fault state of the platform fabric (``()`` healthy).
+
+        Folded into the drift fingerprint: a link failure changes neither
+        the derate vector nor the dead set, so without this the tuner would
+        be blind to the one drift class that lives in the fabric.
+        """
+        fabric = self.platform.fabric
+        return fabric.fault_fingerprint() if fabric is not None else ()
 
     def observe(
         self,
@@ -362,27 +400,31 @@ class ContinuousShisha:
         drift: EPDerates,
         dead: FrozenSet[int],
     ) -> Retune | None:
-        fingerprint = (drift.factors, frozenset(dead))
+        fingerprint = (drift.factors, frozenset(dead), self._fabric_key())
         if fingerprint == self._handled:
             return None
         expected = self._model_ev.stage_times(conf)
         event = self.detector.detect(conf, observed_times, drift, dead, expected)
         if event is None:
             # the detector only sees degradation; an *easing* fingerprint
-            # (derate shrank, dead EP revived) is a chance to reclaim
-            # hardware the current schedule tuned around
-            prev_factors, prev_dead = self._handled
+            # (derate shrank, dead EP revived, link healed) is a chance to
+            # reclaim hardware the current schedule tuned around
+            prev_factors, prev_dead, prev_links = self._handled
             eased = any(
                 f < pf - 1e-9 for f, pf in zip(drift.factors, prev_factors)
             )
             revived = bool(set(prev_dead) - set(dead))
+            cur_links = dict(fingerprint[2])
+            healed = any(
+                cur_links.get(k, 1.0) > f for k, f in sorted(dict(prev_links).items())
+            )
             if (eased or revived) and self._last_kind == "throttle" and not revived:
                 # expected easing: the DVFS step-down (or the cooling it
                 # bought) cleared the throttle derate — re-seeding for it
                 # would thrash against the thermal cycle
                 self._handled = fingerprint
                 return None
-            if eased or revived:
+            if eased or revived or healed:
                 event = Drift("recovery", "platform sped up; re-seeding to reclaim it")
         if event is None:
             # benign drift (e.g. an unused EP derated): remember and move on
@@ -399,7 +441,13 @@ class ContinuousShisha:
                 return retune
             # no power model or no frequency headroom left: fall through to
             # the full re-tune, which can move work off the hot chiplet
-        retune = self._explore(drift, dead, event.kind, warm_conf=conf)
+        explore_dead = frozenset(dead)
+        if event.kind == "link-loss" and self.platform.fabric is not None:
+            # placement rescue: EPs marooned outside the main fabric
+            # component are buried like dead ones, so the seed and every
+            # relocation move avoid them until the link heals
+            explore_dead = explore_dead | frozenset(self.platform.fabric.marooned_eps())
+        retune = self._explore(drift, explore_dead, event.kind, warm_conf=conf)
         self._last_t = t
         self._handled = fingerprint
         self._last_kind = event.kind
@@ -492,10 +540,13 @@ class ContinuousShisha:
             reconfig_overhead=self.reconfig_overhead,
             telemetry=self.telemetry,
         )
-        if kind in ("dropout", "recovery", "repartition") or warm_conf is None:
-            # re-seed via Algorithm 1: a warm start cannot drop a dead EP's
-            # stage by itself, nor grow stages onto recovered (or newly
-            # granted) hardware
+        # a link-loss rescue *must* be allowed to relocate stages — boundary
+        # moves alone can never re-host a stage marooned across a dead link
+        placement = self.placement or kind == "link-loss"
+        if kind in ("dropout", "recovery", "repartition", "link-loss") or warm_conf is None:
+            # re-seed via Algorithm 1: a warm start cannot drop a dead (or
+            # marooned) EP's stage by itself, nor grow stages onto recovered
+            # (or newly granted) hardware
             n_alive = model.n_eps - len(dead)
             if n_alive < 1:
                 raise RuntimeError("all EPs dead; nothing to schedule onto")
@@ -510,7 +561,7 @@ class ContinuousShisha:
                 trace,
                 alpha=self.alpha,
                 balancing=self.balancing,
-                placement=self.placement,
+                placement=placement,
                 placement_exclude=frozenset(dead),
                 dvfs=self.dvfs,
             )
@@ -521,7 +572,7 @@ class ContinuousShisha:
                 trace,
                 alpha=self.alpha,
                 balancing=self.balancing,
-                placement=self.placement,
+                placement=placement,
                 placement_exclude=frozenset(dead),
                 dvfs=self.dvfs,
             )
@@ -563,7 +614,7 @@ class ContinuousShisha:
         self.platform = platform
         if make_evaluator is not None:
             self.make_evaluator = make_evaluator
-        self._handled = ((1.0,) * platform.n_eps, frozenset())
+        self._handled = ((1.0,) * platform.n_eps, frozenset(), self._fabric_key())
         self._model_ev = self.make_evaluator(platform)
 
     def force_retune(
@@ -583,6 +634,6 @@ class ContinuousShisha:
         """
         retune = self._explore(drift, dead, kind)
         self._last_t = t
-        self._handled = (drift.factors, frozenset(dead))
+        self._handled = (drift.factors, frozenset(dead), self._fabric_key())
         self._last_kind = kind
         return retune

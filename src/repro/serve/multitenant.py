@@ -415,6 +415,8 @@ class SharedClockCoSimulator:
         telemetry=None,
         max_bundle: int = 1,
         loop: EventLoop | None = None,
+        chaos=None,
+        resilience=None,
     ):
         if make_evaluator is None:
             make_evaluator = lambda p, layers: DatabaseEvaluator(p, layers)
@@ -448,6 +450,12 @@ class SharedClockCoSimulator:
         #: max EPs a victim under extreme pressure may receive per
         #: repartition (package deal); 1 = classic single steal
         self.max_bundle = max(1, max_bundle)
+        #: seeded :class:`~repro.faults.FaultModel` expanded over the
+        #: *global* platform at run() time, or None (no chaos)
+        self.chaos = chaos
+        #: request-level :class:`~repro.faults.ResiliencePolicy` installed
+        #: in every lane, or None (blind lanes)
+        self.resilience = resilience
 
         #: the shared event engine; injectable so the old-vs-new
         #: equivalence suite can drive a whole co-simulation on the legacy
@@ -531,6 +539,7 @@ class SharedClockCoSimulator:
             loop=self.loop,
             telemetry=self.telemetry,
             label=tenant.name,
+            resilience=self.resilience,
         )
 
     # -- global fault script (global EP indices) ----------------------------
@@ -594,6 +603,85 @@ class SharedClockCoSimulator:
             # some lane transiently serves on it during its install window
             if sim.elastic and sim._owner_of(ep_idx) is None:
                 sim._unhandled_revived.append(ep_idx)
+
+        self._scripted.append((t, apply))
+
+    def schedule_link_fault(self, t: float, u: int, v: int, factor: float) -> None:
+        """At ``t`` the global fabric link (u, v) fails/degrades/heals.
+
+        Link state is shared by reference between the global fabric and
+        every lane's restricted copy, so one mutation is instantly visible
+        to all tenants; each lane then re-prices its stage times under the
+        new effective topology and gets its stages kicked (a healed link
+        may unblock a boundary that priced ``inf``).
+        """
+
+        def apply(sim: "SharedClockCoSimulator", now: float) -> None:
+            fabric = sim.platform.fabric
+            if fabric is None:
+                return
+            fabric.set_link_state(u, v, factor)
+            for name in sorted(sim.lanes):
+                sim._refresh_lane_links(name, now, kick=factor > 0.0)
+
+        self._scripted.append((t, apply))
+
+    def _refresh_lane_links(self, name: str, now: float, kick: bool) -> None:
+        lane = self.lanes[name]
+        lane._base_times = list(lane.evaluator.stage_times(lane.conf))
+        if kick:
+            for s in range(lane.conf.depth):
+                lane._try_start(s, now)
+
+    # -- chaos (seeded stochastic fault model over the global platform) ------
+
+    def _expand_chaos(self, horizon: float) -> None:
+        """Turn the attached fault model into global scripted events.
+
+        Dropouts/revivals reuse the global-index fault script (so the
+        elastic partitioner responds exactly as it would to a scripted
+        death); link events go through :meth:`schedule_link_fault`; each
+        lane additionally draws transient batch errors from its own
+        tenant-name-keyed stream.
+        """
+        from ..faults import FaultInjector
+
+        fabric = self.platform.fabric
+        if fabric is not None and fabric.link_state:
+            # chaos traces start from a healthy fabric: reset leftovers a
+            # previous run on the same platform object left behind
+            fabric.link_state.clear()
+            for name in sorted(self.lanes):
+                self._refresh_lane_links(name, 0.0, kick=False)
+        inj = FaultInjector(self.chaos)
+        for ev in inj.trace(self.platform, horizon):
+            if ev.kind == "dropout":
+                self.schedule_dropout(ev.t, ev.ep)
+                self._mark_chaos(ev.t, "dropouts", {"ep": ev.ep})
+            elif ev.kind == "revival":
+                self.schedule_revival(ev.t, ev.ep)
+                self._mark_chaos(ev.t, "revivals", {"ep": ev.ep})
+            else:
+                self.schedule_link_fault(ev.t, ev.link[0], ev.link[1], ev.factor)
+                self._mark_chaos(
+                    ev.t, "link_faults", {"link": list(ev.link), "factor": ev.factor}
+                )
+        for tenant in self.tenants:
+            bf = inj.batch_failures(tenant.name)
+            if bf is not None:
+                self.lanes[tenant.name]._batch_faults = bf
+
+    def _mark_chaos(self, t: float, counter: str, args: dict) -> None:
+        # pushed after the effect closure at the same timestamp, so the
+        # instant lands once the fault has actually been applied
+        def apply(sim: "SharedClockCoSimulator", now: float) -> None:
+            tl = sim.telemetry
+            if tl is not None:
+                tl.counter(f"chaos.{counter}").inc()
+                tl.instant(
+                    f"chaos:{counter}", now, cat="chaos", pid="coserve", tid="chaos",
+                    args=args,
+                )
 
         self._scripted.append((t, apply))
 
@@ -939,6 +1027,8 @@ class SharedClockCoSimulator:
         # decision must precede (and thereby suppress) lane-local re-tunes
         if self.monitor_interval < horizon:
             self.loop.push(self.monitor_interval, _MONITOR, self, horizon)
+        if self.chaos is not None and self.chaos.enabled:
+            self._expand_chaos(horizon)
         for t, fn in self._scripted:
             self.loop.push(t, _PLATFORM, self, fn)
         for idx, tenant in enumerate(self.tenants):
@@ -1026,14 +1116,21 @@ def co_serve(
     telemetry=None,
     max_bundle: int = 1,
     loop: EventLoop | None = None,
+    chaos=None,
+    resilience=None,
 ) -> CoServeResult:
     """Partition, tune and co-serve all tenants on one shared clock.
 
     ``faults`` is a script of ``("slowdown", t, global_ep, factor)``,
-    ``("dropout", t, global_ep)`` and ``("revival", t, global_ep)`` entries
-    applied to the global platform.  ``telemetry`` (a
-    :class:`~repro.telemetry.Telemetry` session; default off) records the
-    whole run — tenants as trace processes, EPs/links as tracks.
+    ``("dropout", t, global_ep)``, ``("revival", t, global_ep)`` and
+    ``("link", t, u, v, factor)`` entries applied to the global platform.
+    ``chaos`` (a :class:`~repro.faults.FaultModel`) additionally expands a
+    seeded stochastic fault trace — EP deaths/repairs, correlated domain
+    failures, link faults, transient batch errors — over the global
+    platform; ``resilience`` (a :class:`~repro.faults.ResiliencePolicy`)
+    gives every lane deadlines, retries and load shedding.  ``telemetry``
+    (a :class:`~repro.telemetry.Telemetry` session; default off) records
+    the whole run — tenants as trace processes, EPs/links as tracks.
     ``max_bundle`` allows a victim under extreme pressure to receive up to
     that many EPs in one priced package deal per repartition.
     """
@@ -1056,6 +1153,8 @@ def co_serve(
         telemetry=telemetry,
         max_bundle=max_bundle,
         loop=loop,
+        chaos=chaos,
+        resilience=resilience,
     )
     for fault in faults or ():
         if fault[0] == "slowdown":
@@ -1064,6 +1163,8 @@ def co_serve(
             co.schedule_dropout(fault[1], fault[2])
         elif fault[0] == "revival":
             co.schedule_revival(fault[1], fault[2])
+        elif fault[0] == "link":
+            co.schedule_link_fault(fault[1], fault[2], fault[3], fault[4])
         else:
             raise ValueError(f"unknown fault kind {fault[0]!r}")
     return co.run(horizon)

@@ -320,6 +320,8 @@ class Request:
     tenant: int = 0
     t_start: float = math.nan  # first time any stage began serving it
     t_done: float = math.nan
+    #: times this request's batch has errored and been re-served (chaos)
+    attempts: int = 0
 
     @property
     def latency(self) -> float:
@@ -350,6 +352,31 @@ def slo_violation_rate(latencies: Sequence[float], slo: float) -> float:
     return sum(1 for l in latencies if l > slo) / len(latencies)
 
 
+def _requeue(stage: int, r: Request) -> Callable:
+    """Platform-event closure re-admitting ``r`` after a retry backoff.
+
+    If a reconfiguration shrank the pipeline while the retry waited, the
+    original stage index may no longer exist — the request then restarts
+    from stage 0, exactly like drain-and-restart displaces it.
+    """
+
+    def apply(sim: "ServingSimulator", now: float) -> None:
+        s = stage if stage < len(sim._stages) else 0
+        sim._stages[s].queue.append(r)
+        sim._try_start(s, now)
+
+    return apply
+
+
+def _chaos_event(ev) -> Callable:
+    """Bind a :class:`~repro.faults.FaultEvent` to its simulator effect."""
+    if ev.kind == "dropout":
+        return lambda sim, now: sim._chaos_dropout(ev.ep, now)
+    if ev.kind == "revival":
+        return lambda sim, now: sim._chaos_revival(ev.ep, now)
+    return lambda sim, now: sim._chaos_link(ev.link[0], ev.link[1], ev.factor, now)
+
+
 @dataclasses.dataclass
 class SimResult:
     horizon: float
@@ -360,11 +387,13 @@ class SimResult:
     n_queued: int
     latencies: list[float]
     throughput_rps: float
-    p50: float
-    p95: float
-    p99: float
+    #: nearest-rank latency percentiles; None (not NaN — results must stay
+    #: strict-JSON) when nothing completed, e.g. every EP dead at t=0
+    p50: float | None
+    p95: float | None
+    p99: float | None
     #: p95 of time from arrival to first service start (pure queueing delay)
-    p95_wait: float
+    p95_wait: float | None
     #: completed-late requests PLUS requests still in the system at the
     #: horizon that have already outlived the SLO — censoring the backlog
     #: would flatter an arm that stalls and completes nothing
@@ -381,12 +410,27 @@ class SimResult:
     #: (energy_j, joules_per_request, peak_package_w, avg_package_w, cap_w,
     #: throttle_events, max_temp_c, dvfs_levels); None otherwise
     power: dict | None = None
+    #: completions that also met their deadline, per second — equals
+    #: ``throughput_rps`` when no resilience policy sets a deadline
+    goodput_rps: float = 0.0
+    #: arrivals turned away or expired in queue (load shedding)
+    n_shed: int = 0
+    #: requests dropped after exhausting their retry budget
+    n_failed: int = 0
+    #: batch-error re-serves (each member request counts once per re-serve)
+    n_retries: int = 0
+    #: 1 - (shed + failed) / arrived — the fraction of offered load the
+    #: service answered at all
+    availability: float = 1.0
 
     def summary(self) -> str:
+        def ms(x: float | None) -> str:
+            return "n/a" if x is None else f"{x * 1e3:.0f}ms"
+
         return (
             f"arrived={self.n_arrived} done={self.n_completed} "
-            f"tp={self.throughput_rps:.1f}/s p50={self.p50 * 1e3:.0f}ms "
-            f"p95={self.p95 * 1e3:.0f}ms p99={self.p99 * 1e3:.0f}ms "
+            f"tp={self.throughput_rps:.1f}/s p50={ms(self.p50)} "
+            f"p95={ms(self.p95)} p99={ms(self.p99)} "
             f"slo_viol={self.slo_rate * 100:.1f}% reconfigs={len(self.reconfigs)}"
         )
 
@@ -415,6 +459,7 @@ class ServingSimulator:
         loop: EventLoop | None = None,
         telemetry=None,
         label: str = "serve",
+        resilience=None,
     ):
         self.evaluator = evaluator
         self.conf = conf
@@ -458,6 +503,15 @@ class ServingSimulator:
         self._reconfigs: list[dict] = []
         self._load_samples: list[tuple[float, int]] = []
         self._scripted: list[tuple[float, Callable]] = []
+        #: request-level :class:`~repro.faults.ResiliencePolicy` or None
+        #: (None = the pre-chaos blind lane, bit-for-bit)
+        self.resilience = resilience
+        #: seeded per-lane Bernoulli stream of transient batch errors,
+        #: installed by ``prime`` when the platform carries a fault model
+        self._batch_faults = None
+        self._n_shed = 0
+        self._n_failed = 0
+        self._n_retries = 0
         #: attached power model or None; energy integrates over monitor
         #: windows (dynamic joules over busy seconds, leakage over the
         #: whole window), thermal nodes step on the same cadence
@@ -535,6 +589,12 @@ class ServingSimulator:
         """At time ``t`` a dead EP comes back; its stages may serve again."""
         self._scripted.append((t, lambda sim, now: sim.apply_revival(ep_idx, now)))
 
+    def schedule_link_fault(self, t: float, u: int, v: int, factor: float) -> None:
+        """At ``t`` fabric link (u, v) fails (0), degrades, or heals (1)."""
+        self._scripted.append(
+            (t, lambda sim, now: sim.apply_link_fault(u, v, factor, now))
+        )
+
     # fault effects are methods (not closures) so a co-simulator can apply
     # *global* fault scripts to whichever tenant owns the EP at fault time
 
@@ -549,6 +609,10 @@ class ServingSimulator:
             if self.conf.eps[s] == ep_idx and st.busy:
                 st.token += 1  # cancel the in-flight completion
                 st.busy = False
+                for r in st.batch or []:
+                    # the aborted service never happened: keep the wait-time
+                    # clock honest by letting the next real start restamp it
+                    r.t_start = math.nan
                 st.queue.extendleft(reversed(st.batch or []))
                 st.batch = None
 
@@ -557,6 +621,56 @@ class ServingSimulator:
         for s in range(self.conf.depth):
             if self.conf.eps[s] == ep_idx:
                 self._try_start(s, now)
+
+    def apply_link_fault(self, u: int, v: int, factor: float, now: float) -> None:
+        """A fabric link's state changes: dead (0), degraded, or healed (1).
+
+        Mutates the shared fabric link-state (visible to every tenant on
+        the same fabric), re-prices this lane's stage times under the new
+        effective topology, and — on heal/degrade — kicks every stage,
+        since a boundary that priced ``inf`` may be serveable again.
+        """
+        fabric = self.evaluator.platform.fabric
+        if fabric is None:
+            return
+        fabric.set_link_state(u, v, factor)
+        self._base_times = list(self.evaluator.stage_times(self.conf))
+        if factor > 0.0:
+            for s in range(self.conf.depth):
+                self._try_start(s, now)
+
+    # chaos wrappers: telemetry lives here, NOT in the apply_* methods, so
+    # scripted-fault runs (and their pinned telemetry exports) are untouched
+
+    def _chaos_dropout(self, ep_idx: int, now: float) -> None:
+        self.apply_dropout(ep_idx)
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("chaos.dropouts").inc()
+            tl.instant(
+                "chaos:dropout", now, cat="chaos", pid=self.label, tid="chaos",
+                args={"ep": ep_idx},
+            )
+
+    def _chaos_revival(self, ep_idx: int, now: float) -> None:
+        self.apply_revival(ep_idx, now)
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("chaos.revivals").inc()
+            tl.instant(
+                "chaos:revival", now, cat="chaos", pid=self.label, tid="chaos",
+                args={"ep": ep_idx},
+            )
+
+    def _chaos_link(self, u: int, v: int, factor: float, now: float) -> None:
+        self.apply_link_fault(u, v, factor, now)
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("chaos.link_faults").inc()
+            tl.instant(
+                "chaos:link", now, cat="chaos", pid=self.label, tid="chaos",
+                args={"link": [u, v], "factor": factor},
+            )
 
     # -- live fabric contention ---------------------------------------------
 
@@ -604,9 +718,22 @@ class ServingSimulator:
         ep = self.conf.eps[stage]
         if st.busy or not st.queue or t < self._stall_until or ep in self.dead:
             return
+        base = self._effective_time(stage)
+        if not math.isfinite(base):
+            return  # stage boundary severed by a link fault: cannot serve
+        pol = self.resilience
+        if pol is not None and pol.shed_expired and pol.deadline_s is not None:
+            # a request that already missed its deadline would only burn
+            # service time others still on budget could use — shed it now,
+            # at whatever stage it is queued (an outage strands expired
+            # work wherever the dead EP sat, not just at admission)
+            while st.queue and pol.expired(st.queue[0].t_arrival, t):
+                self._shed(st.queue.popleft(), t)
+            if not st.queue:
+                return
         b = min(len(st.queue), self.batch_policy[stage])
         batch = [st.queue.popleft() for _ in range(b)]
-        dt = self._effective_time(stage) * (1.0 + (b - 1) * self.batch_efficiency)
+        dt = base * (1.0 + (b - 1) * self.batch_efficiency)
         for r in batch:
             if math.isnan(r.t_start):
                 r.t_start = t
@@ -643,6 +770,13 @@ class ServingSimulator:
                     {"stage": stage, "batch": len(batch)},
                 )
             )
+        bf = self._batch_faults
+        if bf is not None and batch and bf.fails():
+            # transient batch error: the work was done (busy time stands)
+            # but the output is garbage and must be re-served
+            self._on_batch_error(t, stage, batch)
+            self._try_start(stage, t)
+            return
         if stage == self.conf.depth - 1:
             for r in batch:
                 r.t_done = t
@@ -670,6 +804,48 @@ class ServingSimulator:
             self._stages[stage + 1].queue.extend(batch)
             self._try_start(stage + 1, t)
         self._try_start(stage, t)
+
+    def _shed(self, r: Request, t: float) -> None:
+        self._n_shed += 1
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("chaos.shed").inc()
+            tl.instant(
+                "chaos:shed", t, cat="chaos", pid=self.label, tid="chaos",
+                args={"rid": r.rid},
+            )
+
+    def _on_batch_error(self, t: float, stage: int, batch: list) -> None:
+        """A served batch errored (chaos): retry, fail, or blindly re-serve."""
+        pol = self.resilience
+        tl = self.telemetry
+        if tl is not None:
+            tl.counter("chaos.batch_errors").inc()
+            tl.instant(
+                "chaos:batch_error", t, cat="chaos", pid=self.label, tid="chaos",
+                args={"stage": stage, "batch": len(batch)},
+            )
+        if pol is None:
+            # blind lane: immediate, unbounded head-of-line re-serve — the
+            # failure mode the resilient arm is benchmarked against
+            for r in reversed(batch):
+                r.attempts += 1
+                r.t_start = math.nan
+                self._stages[stage].queue.appendleft(r)
+            self._n_retries += len(batch)
+            return
+        for r in batch:
+            r.attempts += 1
+            if r.attempts > pol.max_retries:
+                self._n_failed += 1
+                if tl is not None:
+                    tl.counter("chaos.failed").inc()
+                continue
+            self._n_retries += 1
+            if tl is not None:
+                tl.counter("chaos.retries").inc()
+            r.t_start = math.nan
+            self._push(t + pol.backoff(r.rid, r.attempts), _PLATFORM, _requeue(stage, r))
 
     def _begin_reconfig(self, t: float, retune, replatform: "Replatform | None" = None, extra: dict | None = None) -> None:
         # The old configuration keeps serving during the exploration window
@@ -900,8 +1076,33 @@ class ServingSimulator:
         )
         for t, fn in self._scripted:
             self._push(t, _PLATFORM, fn)
+        fm = getattr(self.evaluator.platform, "faults", None)
+        if fm is not None and fm.enabled:
+            self._prime_chaos(fm, horizon)
         if self.monitor_interval < horizon:
             self._push(self.monitor_interval, _MONITOR, horizon)
+
+    def _prime_chaos(self, fm, horizon: float) -> None:
+        """Expand the platform's fault model into scheduled platform events.
+
+        The whole chaos trace is a pure function of (model, seed, horizon):
+        it is generated up front by :class:`~repro.faults.FaultInjector` and
+        pushed through the ordinary ``_PLATFORM`` path, so both event
+        engines dispatch it identically.
+        """
+        from ..faults import FaultInjector
+
+        fabric = self.evaluator.platform.fabric
+        if fabric is not None and fabric.link_state:
+            # the chaos trace is generated from a healthy t=0 baseline; a
+            # previous run on the same platform object may have left link
+            # faults behind — reset so reruns are bit-for-bit reproducible
+            fabric.link_state.clear()
+            self._base_times = list(self.evaluator.stage_times(self.conf))
+        inj = FaultInjector(fm)
+        for ev in inj.trace(self.evaluator.platform, horizon):
+            self._push(ev.t, _PLATFORM, _chaos_event(ev))
+        self._batch_faults = inj.batch_failures(self.label)
 
     def _dispatch(self, t: float, kind: int, payload) -> None:
         """Handle one event; called by whichever loop owns the clock."""
@@ -909,6 +1110,16 @@ class ServingSimulator:
             self._n_arrived += 1
             if self.telemetry is not None:
                 self._m_arrivals.inc()
+            pol = self.resilience
+            if pol is not None and pol.queue_cap is not None:
+                q = self._stages[0].queue
+                if pol.shed_expired and pol.deadline_s is not None:
+                    # expired requests don't get to hold admission slots
+                    while q and pol.expired(q[0].t_arrival, t):
+                        self._shed(q.popleft(), t)
+                if len(q) >= pol.queue_cap:
+                    self._shed(payload, t)
+                    return
             self._stages[0].queue.append(payload)
             self._try_start(0, t)
         elif kind == _DONE:
@@ -959,6 +1170,13 @@ class ServingSimulator:
         occ = {name: busy / horizon for name, busy in self._busy_prev.items()}
         for i, ep in enumerate(self.evaluator.platform.eps):
             occ[ep.name] = occ.get(ep.name, 0.0) + self._busy_time[i] / horizon
+        pol = self.resilience
+        deadline = pol.deadline_s if pol is not None else None
+        if deadline is None:
+            n_good = len(self._completed)
+        else:
+            n_good = sum(1 for l in lats if l <= deadline)
+        lost = self._n_shed + self._n_failed
         return SimResult(
             horizon=horizon,
             slo=self.slo,
@@ -968,16 +1186,25 @@ class ServingSimulator:
             n_queued=n_queued,
             latencies=lats,
             throughput_rps=len(self._completed) / horizon if horizon > 0 else 0.0,
-            p50=percentile(lats, 0.50),
-            p95=percentile(lats, 0.95),
-            p99=percentile(lats, 0.99),
-            p95_wait=percentile(sorted(r.t_start - r.t_arrival for r in self._completed), 0.95),
+            p50=percentile(lats, 0.50) if lats else None,
+            p95=percentile(lats, 0.95) if lats else None,
+            p99=percentile(lats, 0.99) if lats else None,
+            p95_wait=(
+                percentile(sorted(r.t_start - r.t_arrival for r in self._completed), 0.95)
+                if self._completed
+                else None
+            ),
             n_slo_violations=n_viol,
             slo_rate=n_viol / self._n_arrived if self._n_arrived else 0.0,
             occupancy=occ,
             reconfigs=self._reconfigs,
             load_samples=self._load_samples,
             power=power,
+            goodput_rps=n_good / horizon if horizon > 0 else 0.0,
+            n_shed=self._n_shed,
+            n_failed=self._n_failed,
+            n_retries=self._n_retries,
+            availability=1.0 - lost / self._n_arrived if self._n_arrived else 1.0,
         )
 
     def result(self, horizon: float) -> SimResult:

@@ -1,0 +1,12 @@
+"""Violates unseeded-random: MTBF renewal sampling off the global RNG."""
+import random
+
+
+def down_intervals(mtbf, mttr, horizon):
+    out = []
+    t = random.expovariate(1.0 / mtbf)
+    while t < horizon:
+        repair = random.expovariate(1.0 / mttr)
+        out.append((t, t + repair))
+        t = t + repair + random.expovariate(1.0 / mtbf)
+    return out

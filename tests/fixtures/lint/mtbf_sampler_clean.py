@@ -1,0 +1,16 @@
+"""Clean MTBF sampler: every draw threads an explicit seeded stream."""
+import random
+
+
+def down_intervals(rng: random.Random, mtbf, mttr, horizon):
+    out = []
+    t = rng.expovariate(1.0 / mtbf)
+    while t < horizon:
+        repair = rng.expovariate(1.0 / mttr)
+        out.append((t, t + repair))
+        t = t + repair + rng.expovariate(1.0 / mtbf)
+    return out
+
+
+def trace(seed, mtbf, mttr, horizon):
+    return down_intervals(random.Random(seed), mtbf, mttr, horizon)

@@ -40,6 +40,7 @@ RULE_FIXTURES = [
     ("event-past", "event_past"),
     ("wall-clock", "thermal_accum"),
     ("float-accum", "thermal_accum"),
+    ("unseeded-random", "mtbf_sampler"),
 ]
 
 

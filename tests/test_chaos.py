@@ -1,0 +1,434 @@
+"""Chaos layer: seeded fault injection, link-fault routing, resilience.
+
+Contracts pinned here:
+
+  1. **Trace purity** — a chaos trace is a pure function of (model,
+     platform shape, horizon): regenerating it, in any process, with
+     either event engine, yields the identical event tuple.
+  2. **Degenerate equivalence** — attaching :func:`repro.faults.no_faults`
+     (or nothing) reproduces the fault-free serve results *and* telemetry
+     exports bit-for-bit (the fabric-playbook off-by-default contract).
+  3. **Link-fault routing** — dead links leave the candidate routes,
+     severed stage boundaries price ``inf``, the ``"link-loss"`` drift is
+     detected, and the autotuner's placement rescue re-tunes around the
+     cut (charged to the Trace).
+  4. **Resilience accounting** — deadlines, retries, shedding and the
+     goodput/availability arithmetic in :class:`SimResult`, all
+     strict-JSON serializable even when nothing completes.
+"""
+
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.core import DatabaseEvaluator, Trace, generate_seed, paper_platform, tune, weights
+from repro.core.config import PipelineConfig
+from repro.faults import (
+    FAULT_KINDS,
+    FaultEvent,
+    FaultInjector,
+    FaultModel,
+    ResiliencePolicy,
+    no_faults,
+)
+from repro.faults.injector import _down_intervals, _merge, stream
+from repro.interconnect import mesh2d, uniform_fabric
+from repro.models.cnn import network_layers
+from repro.serve import (
+    ContinuousShisha,
+    HeapEventLoop,
+    PoissonTraffic,
+    ServingSimulator,
+    Tenant,
+    co_serve,
+)
+from repro.telemetry import Telemetry
+
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def tuned():
+    layers = network_layers("synthnet")
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e9, latency=1e-6))
+    )
+    ev = DatabaseEvaluator(plat, layers)
+    res = tune(generate_seed(weights(layers), plat), Trace(ev))
+    return {
+        "layers": layers,
+        "plat": plat,
+        "conf": res.best_conf,
+        "cap": res.best_throughput,
+    }
+
+
+CHAOS = FaultModel(
+    seed=7,
+    ep_mtbf={1: 8.0, 2: 8.0},
+    ep_mttr={1: 2.0, 2: 2.0},
+    link_mtbf=12.0,
+    link_mttr=2.0,
+    batch_error_p=0.03,
+)
+
+
+def _run(tuned, platform, *, resilience=None, autotuner=None, loop=None, telemetry=None):
+    ev = DatabaseEvaluator(platform, tuned["layers"])
+    sim = ServingSimulator(
+        ev,
+        tuned["conf"],
+        slo=1.0,
+        resilience=resilience,
+        autotuner=autotuner,
+        loop=loop,
+        telemetry=telemetry,
+    )
+    arrivals = PoissonTraffic(rate=10.0, seed=5).arrivals(30.0)
+    return sim.run(arrivals, 30.0)
+
+
+# ---------------------------------------------------------------------------
+# 1. trace purity and injector invariants
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_trace_is_pure_and_sorted(tuned):
+    plat = tuned["plat"]
+    a = FaultInjector(CHAOS).trace(plat, 30.0)
+    b = FaultInjector(CHAOS).trace(plat, 30.0)
+    assert a == b and len(a) > 0
+    assert all(e.kind in FAULT_KINDS for e in a)
+    assert all(x.t <= y.t for x, y in zip(a, a[1:]))
+    kinds = {e.kind for e in a}
+    assert "dropout" in kinds and "link" in kinds and "revival" in kinds
+    # a different seed perturbs the trace; a longer horizon only extends it
+    assert FaultInjector(dataclasses.replace(CHAOS, seed=8)).trace(plat, 30.0) != a
+    longer = FaultInjector(CHAOS).trace(plat, 60.0)
+    assert {e for e in a if e.t < 30.0} <= set(longer)
+
+
+def test_stream_keying_is_stable_and_independent():
+    assert stream(1, "ep", 0).random() == stream(1, "ep", 0).random()
+    assert stream(1, "ep", 0).random() != stream(1, "ep", 1).random()
+    assert stream(1, "ep", 0).random() != stream(2, "ep", 0).random()
+    # adding a class never perturbs another stream's draws
+    assert stream(1, "link", (0, 1)).random() != stream(1, "degrade", (0, 1)).random()
+
+
+def test_domain_failure_union_never_revives_inside_overlap():
+    """An EP down for (EP-process OR domain-process) revives only when the
+    merged interval ends — overlapping failures emit no early revival."""
+    merged = _merge([(1.0, 4.0), (3.0, 6.0), (8.0, 9.0)])
+    assert merged == [(1.0, 6.0), (8.0, 9.0)]
+    fm = FaultModel(
+        seed=3,
+        ep_mtbf={1: 4.0},
+        ep_mttr={1: 2.0},
+        domains=((0, 1),),
+        domain_mtbf=4.0,
+        domain_mttr=2.0,
+    )
+    trace = FaultInjector(fm).trace(paper_platform(4), 50.0)
+    state = {}
+    for ev in trace:
+        if ev.kind == "dropout":
+            assert state.get(ev.ep) != "down", f"double dropout for EP {ev.ep}"
+            state[ev.ep] = "down"
+        elif ev.kind == "revival":
+            assert state.get(ev.ep) == "down", f"revival of live EP {ev.ep}"
+            state[ev.ep] = "up"
+
+
+def test_hard_link_failure_shadows_degradation(tuned):
+    fm = FaultModel(
+        seed=5, link_mtbf=6.0, link_mttr=3.0, degrade_mtbf=4.0, degrade_mttr=4.0
+    )
+    trace = FaultInjector(fm).trace(tuned["plat"], 40.0)
+    factors = {}
+    for ev in trace:
+        assert ev.kind == "link"
+        assert ev.factor != factors.get(ev.link), "no-op link event emitted"
+        factors[ev.link] = ev.factor
+    assert 0.0 in factors.values() or any(
+        f == fm.degrade_factor for f in factors.values()
+    )
+
+
+def test_batch_failure_streams_are_label_keyed():
+    inj = FaultInjector(dataclasses.replace(CHAOS, batch_error_p=0.5))
+    sa, sa2, sb = (inj.batch_failures(l) for l in ("a", "a", "b"))
+    a = [sa.fails() for _ in range(64)]
+    a2 = [sa2.fails() for _ in range(64)]
+    b = [sb.fails() for _ in range(64)]
+    assert a == a2 and a != b
+    assert FaultInjector(no_faults()).batch_failures("a") is None
+
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(t=1.0, kind="dropout")
+    with pytest.raises(ValueError):
+        FaultEvent(t=1.0, kind="link", link=(0, 1), factor=2.0)
+    with pytest.raises(ValueError):
+        FaultModel(ep_mtbf={1: 5.0})  # MTBF without MTTR
+    with pytest.raises(ValueError):
+        paper_platform(4).with_faults(
+            FaultModel(domains=((0, 9),), domain_mtbf=1.0, domain_mttr=1.0)
+        )
+
+
+# ---------------------------------------------------------------------------
+# 2. degenerate contract — off by default, bit-for-bit
+# ---------------------------------------------------------------------------
+
+
+def test_no_faults_attachment_is_bit_for_bit_degenerate(tuned):
+    tl_bare, tl_none = Telemetry(), Telemetry()
+    bare = _run(tuned, tuned["plat"], telemetry=tl_bare)
+    degen = _run(tuned, tuned["plat"].with_faults(no_faults()), telemetry=tl_none)
+    assert bare == degen
+    assert tl_bare.export_jsonl() == tl_none.export_jsonl()
+
+
+def test_resilience_policy_alone_is_inert_when_nothing_fails(tuned):
+    """Deadline/retry/shed knobs only act on faults or pressure: with no
+    chaos and a queue cap the traffic never reaches, results are identical
+    except for the goodput accounting the deadline defines."""
+    pol = ResiliencePolicy(deadline_s=1e9, max_retries=2, queue_cap=10_000)
+    bare = _run(tuned, tuned["plat"])
+    guarded = _run(tuned, tuned["plat"], resilience=pol)
+    assert guarded.n_shed == 0 and guarded.n_failed == 0 and guarded.n_retries == 0
+    assert guarded.latencies == bare.latencies
+    assert guarded.goodput_rps == bare.throughput_rps
+
+
+# ---------------------------------------------------------------------------
+# determinism: same seeds -> identical results, on both engines
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_run_is_deterministic_across_reruns_and_engines(tuned):
+    plat = tuned["plat"]
+    first = _run(tuned, plat.with_faults(CHAOS))
+    rerun = _run(tuned, plat.with_faults(CHAOS))
+    legacy = _run(tuned, plat.with_faults(CHAOS), loop=HeapEventLoop())
+    assert first == rerun == legacy
+    assert first.n_retries > 0  # the chaos actually bit
+
+
+def test_chaos_telemetry_is_deterministic(tuned):
+    tl_a, tl_b = Telemetry(), Telemetry()
+    ra = _run(tuned, tuned["plat"].with_faults(CHAOS), telemetry=tl_a)
+    rb = _run(tuned, tuned["plat"].with_faults(CHAOS), telemetry=tl_b)
+    assert ra == rb
+    assert tl_a.export_jsonl() == tl_b.export_jsonl()
+    names = {e.name for e in tl_a.tracer.events}
+    assert "chaos:link" in names or "chaos:dropout" in names
+
+
+# ---------------------------------------------------------------------------
+# 3. link faults: routing, pricing, drift detection, rescue
+# ---------------------------------------------------------------------------
+
+
+def test_dead_link_leaves_candidate_routes():
+    topo = mesh2d(2, 4, bw=1e9, latency=1e-6)
+    cut = topo.without_link((0, 1))
+    assert (0, 1) not in cut.links
+    for path in cut.k_shortest_paths(0, 1, 4):
+        hops = list(zip(path, path[1:]))
+        assert (0, 1) not in hops and (1, 0) not in hops
+    with pytest.raises(KeyError):
+        topo.without_link((0, 5))
+
+
+def test_degraded_links_scale_bandwidth_and_zero_removes():
+    topo = mesh2d(1, 3, bw=1e9, latency=1e-6)
+    worse = topo.with_degraded_links({(0, 1): 0.5})
+    assert worse.links[(0, 1)].bw == pytest.approx(0.5e9)
+    cut = topo.with_degraded_links({(1, 2): 0.0})
+    assert (1, 2) not in cut.links
+    assert not cut.connected(0, 2)
+    assert tuple(cut.components()) == ((0, 1), (2,))
+
+
+def test_link_fault_severs_flow_and_heals_back_identically(tuned):
+    plat = paper_platform(4).with_fabric(
+        uniform_fabric(mesh2d(1, 4, bw=1e9, latency=1e-6))
+    )
+    fabric = plat.fabric
+    before = fabric.latency_ep(0, 3)
+    fabric.fail_link(1, 2)  # the only path 0..3 crosses it
+    assert math.isinf(fabric.latency_ep(0, 3))
+    assert fabric.marooned_eps() == (2, 3)
+    fabric.restore_link(1, 2)
+    assert fabric.latency_ep(0, 3) == before
+    assert fabric.fault_fingerprint() == ()
+
+
+def test_link_state_is_shared_with_restricted_lane_fabrics():
+    plat = paper_platform(4).with_fabric(
+        uniform_fabric(mesh2d(1, 4, bw=1e9, latency=1e-6))
+    )
+    lane = plat.fabric.restrict([2, 3])
+    plat.fabric.fail_link(2, 3)
+    assert math.isinf(lane.latency_ep(0, 1))  # lane-local indices for EPs 2,3
+    plat.fabric.restore_link(2, 3)
+    assert math.isfinite(lane.latency_ep(0, 1))
+
+
+def test_severed_boundary_charges_only_reconfig_cost():
+    layers = network_layers("synthnet")
+    plat = paper_platform(4).with_fabric(
+        uniform_fabric(mesh2d(1, 4, bw=1e9, latency=1e-6))
+    )
+    ev = DatabaseEvaluator(plat, layers)
+    conf = PipelineConfig(stages=(len(layers) - 1, 1), eps=(1, 2))
+    trace = Trace(ev)
+    plat.fabric.fail_link(1, 2)
+    tp = trace.execute(conf)
+    assert tp == 0.0
+    assert trace.wall == pytest.approx(trace.reconfig_overhead)
+    plat.fabric.restore_link(1, 2)
+
+
+def test_link_loss_drift_detected_and_rescued_by_retune():
+    """Cutting the only link under a stage boundary must surface as a
+    ``"link-loss"`` drift and be answered by a placement rescue that gets
+    the pipeline flowing again on the surviving component."""
+    layers = network_layers("synthnet")
+    plat = paper_platform(4).with_fabric(
+        uniform_fabric(mesh2d(1, 4, bw=1e9, latency=1e-6))
+    )
+    ev = DatabaseEvaluator(plat, layers)
+    conf = PipelineConfig(stages=(len(layers) - 1, 1), eps=(1, 2))
+    tuner = ContinuousShisha(
+        plat,
+        layers,
+        make_evaluator=lambda p: DatabaseEvaluator(p, layers),
+        measure_batches=2,
+        alpha=4,
+    )
+    sim = ServingSimulator(ev, conf, slo=5.0, autotuner=tuner, monitor_interval=0.5)
+    sim.schedule_link_fault(5.0, 1, 2, 0.0)
+    res = sim.run(PoissonTraffic(rate=5.0, seed=3).arrivals(40.0), 40.0)
+    kinds = [r["kind"] for r in res.reconfigs]
+    assert "link-loss" in kinds
+    rescue = next(r for r in res.reconfigs if r["kind"] == "link-loss")
+    assert rescue["tuning_cost_s"] > 0.0  # the rescue was charged to the Trace
+    # the pipeline flows again after the rescue: completions keep accruing
+    assert res.n_completed > 0
+    late = [l for l in res.latencies if l < math.inf]
+    assert len(late) == res.n_completed
+    plat.fabric.link_state.clear()
+
+
+# ---------------------------------------------------------------------------
+# 4. request-level resilience and honest accounting
+# ---------------------------------------------------------------------------
+
+
+def test_queue_cap_sheds_and_accounts_availability(tuned):
+    pol = ResiliencePolicy(deadline_s=0.5, max_retries=1, queue_cap=4)
+    slow = FaultModel(seed=2, ep_mtbf={1: 3.0, 2: 3.0}, ep_mttr={1: 4.0, 2: 4.0})
+    res = _run(tuned, tuned["plat"].with_faults(slow), resilience=pol)
+    assert res.n_shed > 0
+    assert res.availability < 1.0
+    assert res.availability == pytest.approx(
+        1.0 - (res.n_shed + res.n_failed) / res.n_arrived
+    )
+    assert res.goodput_rps <= res.throughput_rps
+    # bounded admission: the stage-0 queue can never exceed the cap
+    assert res.n_arrived == res.n_completed + res.n_shed + res.n_failed + (
+        res.n_in_flight + res.n_queued
+    )
+
+
+def test_retry_cap_fails_requests_deterministically(tuned):
+    hot = dataclasses.replace(CHAOS, batch_error_p=0.6)
+    pol = ResiliencePolicy(deadline_s=None, max_retries=0, backoff_s=0.01)
+    res = _run(tuned, tuned["plat"].with_faults(hot), resilience=pol)
+    assert res.n_failed > 0 and res.n_retries == 0
+    rerun = _run(tuned, tuned["plat"].with_faults(hot), resilience=pol)
+    assert res == rerun
+
+
+def test_backoff_is_keyed_not_streamed():
+    pol = ResiliencePolicy(backoff_s=0.1, jitter=0.5, seed=9)
+    a = pol.backoff(3, 1)
+    assert a == pol.backoff(3, 1)  # order-independent determinism
+    assert pol.backoff(3, 2) > a * 1.0  # exponential growth dominates jitter
+    assert pol.backoff(4, 1) != a
+    assert ResiliencePolicy(jitter=0.0).backoff(1, 2) == pytest.approx(0.1)
+
+
+def test_all_eps_dead_result_is_strict_json(tuned):
+    """Nothing ever completes: every percentile is None, not NaN, and the
+    whole result serializes under ``allow_nan=False``."""
+    doom = FaultModel(seed=1, ep_mtbf={1: 1e-9, 2: 1e-9}, ep_mttr={1: 1e9, 2: 1e9})
+    res = _run(tuned, tuned["plat"].with_faults(doom))
+    assert res.n_completed == 0
+    assert res.p50 is None and res.p95 is None and res.p99 is None
+    assert res.p95_wait is None
+    json.dumps(dataclasses.asdict(res), allow_nan=False)
+    assert "n/a" in res.summary()
+
+
+def test_dropout_requeue_resets_wait_clock(tuned):
+    """Satellite regression: a request whose batch is aborted by a dropout
+    must not keep its pre-fault ``t_start`` — its wait time spans until the
+    service that actually completed it began."""
+    layers = tuned["layers"]
+    plat = paper_platform(2)
+    ev = DatabaseEvaluator(plat, layers)
+    conf = PipelineConfig(stages=(len(layers),), eps=(0,))
+    sim = ServingSimulator(ev, conf, slo=50.0, max_batch=1)
+    beat = ev.stage_times(conf)[0]
+    sim.schedule_dropout(beat / 2.0, 0)  # mid-service of the first request
+    sim.schedule_revival(10.0, 0)
+    res = sim.run([0.0], 30.0)
+    assert res.n_completed == 1
+    assert res.p95_wait == pytest.approx(10.0)  # not 0.0: service restarted
+
+
+def test_co_serve_chaos_is_deterministic_and_resilient_knob_wires_through():
+    layers = tuple(network_layers("synthnet"))
+    plat = paper_platform(8).with_fabric(
+        uniform_fabric(mesh2d(2, 4, bw=1e9, latency=1e-6))
+    )
+    tenants = [
+        Tenant(name="a", layers=layers, traffic=PoissonTraffic(rate=4.0, seed=1)),
+        Tenant(name="b", layers=layers, traffic=PoissonTraffic(rate=4.0, seed=2)),
+    ]
+    chaos = dataclasses.replace(CHAOS, batch_error_p=0.1)
+    pol = ResiliencePolicy(deadline_s=5.0, max_retries=2, queue_cap=256)
+
+    def go():
+        return co_serve(
+            plat,
+            tenants,
+            horizon=12.0,
+            chaos=chaos,
+            resilience=pol,
+            measure_batches=2,
+            alpha=4,
+        )
+
+    ra, rb = go(), go()
+    assert [r.sim for r in ra.results] == [r.sim for r in rb.results]
+    assert all(r.sim.goodput_rps <= r.sim.throughput_rps for r in ra.results)
+
+
+def test_subplatform_drops_fault_spec():
+    from repro.serve import subplatform
+
+    plat = paper_platform(4).with_faults(CHAOS)
+    sub = subplatform(plat, [0, 1], "sub")
+    assert sub.faults is None
+    assert plat.without([3]).faults is None

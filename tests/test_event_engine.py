@@ -314,6 +314,54 @@ def test_sim_result_bit_for_bit_across_engines(tuned, scenario):
     assert res_new == res_old  # every SimResult field, incl. power block
 
 
+@pytest.mark.parametrize("order", ["drop-then-revive", "revive-then-drop"])
+def test_same_timestamp_dropout_revival_dispatch_in_push_order(tuned, order):
+    """Scripted dropout + revival of one EP at the *same* timestamp are
+    both ``_PLATFORM`` events: the (time, kind, push-order) contract says
+    the one pushed first wins, identically on both engines."""
+    ep = tuned["conf"].eps[0]
+
+    def run(loop_cls):
+        ev = DatabaseEvaluator(tuned["plat"], tuned["layers"])
+        sim = ServingSimulator(ev, tuned["conf"], slo=tuned["slo"], loop=loop_cls())
+        sim.schedule_dropout(5.0, ep)
+        if order == "drop-then-revive":
+            sim.schedule_dropout(12.0, ep)
+            sim.schedule_revival(12.0, ep)  # pushed last: EP ends alive
+        else:
+            sim.schedule_revival(12.0, ep)
+            sim.schedule_dropout(12.0, ep)  # pushed last: EP stays dead
+        arrivals = PoissonTraffic(rate=0.6 * tuned["cap"], seed=5).arrivals(30.0)
+        return sim, sim.run(arrivals, 30.0)
+
+    sim_new, res_new = run(EventLoop)
+    sim_old, res_old = run(HeapEventLoop)
+    assert res_new == res_old
+    if order == "drop-then-revive":
+        assert ep not in sim_new.dead and ep not in sim_old.dead
+    else:
+        assert ep in sim_new.dead and ep in sim_old.dead
+
+
+def test_push_order_of_same_timestamp_faults_changes_the_outcome(tuned):
+    """The two orders above are genuinely different programs — if they
+    converged, the tie-break test would be vacuous."""
+    ep = tuned["conf"].eps[0]
+
+    def run(first, second):
+        ev = DatabaseEvaluator(tuned["plat"], tuned["layers"])
+        sim = ServingSimulator(ev, tuned["conf"], slo=tuned["slo"], loop=EventLoop())
+        sim.schedule_dropout(5.0, ep)
+        first(sim)
+        second(sim)
+        arrivals = PoissonTraffic(rate=0.6 * tuned["cap"], seed=5).arrivals(30.0)
+        return sim.run(arrivals, 30.0)
+
+    drop = lambda sim: sim.schedule_dropout(12.0, ep)
+    revive = lambda sim: sim.schedule_revival(12.0, ep)
+    assert run(drop, revive) != run(revive, drop)
+
+
 def test_co_serve_result_bit_for_bit_across_engines():
     """Elastic, faulted shared-clock co-simulation under either engine."""
     plat = paper_platform(8)
